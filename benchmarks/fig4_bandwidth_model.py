@@ -1,0 +1,133 @@
+"""Benchmark: Figure 4 / Table 5 / Figure 6 — step time vs inter-node
+bandwidth, with and without QSDP.
+
+This container cannot measure multi-node wall time, so this is the
+*analytic* communication model over the exact wire-byte accounting of the
+engine (core.qsdp.step_comm_bytes — the same byte counts observed in the
+compiled dry-run HLO):
+
+  step(bw) = t_compute + wire_bytes_per_gpu / bw_per_gpu
+
+Part A reproduces the paper's setup: GPT-{125M,350M,1.3B}, 4 nodes x 8
+V100s (pure FSDP, no TP), weights fp32 / grads fp16 baseline vs QSDP
+W8G8/W4G4; bandwidths 10/50/100 Gbps.  t_compute is calibrated from the
+paper's own no-communication step time for the 1.3B model (~13.2s, Table 5
+ideal-scaling line) scaled by model FLOPs.
+
+Validated claims:
+  * baseline step time grows sharply as bandwidth drops (bw bottleneck);
+  * QSDP W8G8 step time is ~constant across 10-100 Gbps (Fig 4);
+  * end-to-end speedup at 10 Gbps is ~2x for the 1.3B model (paper: 2.2x);
+  * weight compression matters more than gradient compression (Table 5).
+
+Part B applies the same model to this repo's TPU meshes using the
+multi-pod dry-run's parsed collective bytes (results/dryrun_*.jsonl),
+sweeping the pod-to-pod (DCN) bandwidth.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro import configs
+from repro.core.qsdp import MeshSpec, QSDPConfig, QSDPEngine, step_comm_bytes
+from repro.models.transformer import Model
+
+
+def paper_cluster_bytes(arch: str, qsdp: QSDPConfig) -> int:
+    """Per-GPU wire bytes of one step on the paper's 32-GPU pure-FSDP
+    cluster (grad accumulation 4 => 4x weight gathers per optimizer step
+    ... the paper's App. B observes ~5 weight transmissions per gradient
+    exchange; we model the FSDP schedule: 2 AG per microbatch fwd+bwd, 1 RS
+    per microbatch)."""
+    ms = MeshSpec(axes=("data", "model"), shape=(32, 1))
+    model = Model(configs.get_config(arch), ms, qsdp)
+    n_micro = 4
+    b = step_comm_bytes(model.engine, gathers_per_param=2 * n_micro,
+                        reduces_per_param=n_micro)
+    return b["total"]
+
+
+POLICIES = {
+    "baseline (W:fp32 G:fp16)": QSDPConfig.baseline(),
+    "QSDP W8G8": QSDPConfig(),
+    "QSDP W4G4": QSDPConfig(weight_bits=4, grad_bits=4),
+    "QSDP W8 G:fp16": QSDPConfig(quantize_grads=False),
+    "QSDP G8 W:fp32": QSDPConfig(quantize_weights=False),
+}
+
+# paper-calibrated compute seconds per optimizer step (V100 cluster)
+T_COMPUTE = {"gpt-125m": 1.6, "gpt-350m": 4.2, "gpt-1.3b": 13.2}
+BWS_GBPS = (10, 50, 100)
+
+
+def main(argv=None, out_dir="results/bench"):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-json", default="results/dryrun_qsdp.jsonl")
+    args = ap.parse_args(argv)
+    os.makedirs(out_dir, exist_ok=True)
+
+    out = {"paper_cluster": {}, "tpu_pods": {}}
+    print("# Part A: paper cluster (4x8 V100, pure FSDP), step seconds")
+    speedup_13b_10g = None
+    for arch in ("gpt-125m", "gpt-350m", "gpt-1.3b"):
+        rows = {}
+        for tag, pol in POLICIES.items():
+            byts = paper_cluster_bytes(arch, pol)
+            times = {}
+            for bw in BWS_GBPS:
+                bw_gpu = bw * 1e9 / 8 / 8  # node bw shared by 8 GPUs, bits->bytes
+                times[bw] = T_COMPUTE[arch] + byts / bw_gpu
+            rows[tag] = dict(wire_mb=byts / 2**20, **{f"t{bw}": times[bw] for bw in BWS_GBPS})
+        out["paper_cluster"][arch] = rows
+        print(f"\n{arch}: per-GPU wire MB + step time @10/50/100 Gbps")
+        for tag, r in rows.items():
+            print(f"  {tag:24s} {r['wire_mb']:9.1f}MB  "
+                  + "  ".join(f"{r[f't{bw}']:7.2f}s" for bw in BWS_GBPS))
+        if arch == "gpt-1.3b":
+            speedup_13b_10g = rows["baseline (W:fp32 G:fp16)"]["t10"] / rows["QSDP W8G8"]["t10"]
+            q = rows["QSDP W8G8"]
+            flat = q["t10"] / q["t100"]
+            print(f"  -> 1.3B @10Gbps speedup QSDP vs baseline: {speedup_13b_10g:.2f}x "
+                  f"(paper: 2.2x); QSDP t10/t100 = {flat:.3f} (paper: ~1.0)")
+
+    # weight-vs-grad compression dominance (Table 5 shape)
+    b13 = out["paper_cluster"]["gpt-1.3b"]
+    w_only = b13["QSDP W8 G:fp16"]["t10"]
+    g_only = b13["QSDP G8 W:fp32"]["t10"]
+    print(f"\nweight-compression-only t@10G = {w_only:.2f}s < "
+          f"grad-compression-only {g_only:.2f}s: "
+          f"{'PASS' if w_only < g_only else 'FAIL'} (Table 5 / App. B)")
+
+    # ---- Part B: TPU pods from the dry-run ----
+    if os.path.exists(args.dryrun_json):
+        import collections
+        base_f = args.dryrun_json.replace("qsdp", "baseline")
+        rows = []
+        for f in (args.dryrun_json, base_f):
+            if os.path.exists(f):
+                with open(f) as fh:
+                    rows += [json.loads(l) for l in fh]
+        sel = [r for r in rows if r.get("ok") and r["mesh"] == "2x16x16"
+               and r["shape"] == "train_4k"]
+        print("\n# Part B: 2-pod mesh, DCN bandwidth sweep (train_4k)")
+        print(f"{'arch':22s} {'policy':14s} " +
+              " ".join(f"t@{g}GB/s" for g in (12, 50, 200)))
+        for r in sorted(sel, key=lambda r: (r['arch'], r['tag'])):
+            coll_b = r["collective_bytes"]
+            times = {g: max(r["t_compute"], r["t_memory"]) + coll_b / (g * 1e9)
+                     for g in (12, 50, 200)}
+            out["tpu_pods"][f"{r['arch']}/{r['tag']}"] = times
+            print(f"{r['arch']:22s} {r['tag']:14s} " +
+                  " ".join(f"{times[g]:8.2f}s" for g in (12, 50, 200)))
+
+    with open(os.path.join(out_dir, "fig4_bandwidth_model.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    ok = speedup_13b_10g is not None and speedup_13b_10g > 1.8 and w_only < g_only
+    print("fig4 trends:", "PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

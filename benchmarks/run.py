@@ -1,0 +1,75 @@
+"""Benchmark driver: one benchmark per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+
+| benchmark                    | paper artifact               |
+|------------------------------|------------------------------|
+| theory_convergence           | Theorem 2 / Corollary 3      |
+| table1_recovery              | Table 1 (W8G8 recovery)      |
+| table2_bits_grid             | Table 2 (W x G bit grid)     |
+| table3_learned_levels        | Tables 3/6 (learned levels)  |
+| fig4_bandwidth_model         | Figure 4 / Table 5 / Fig 6   |
+| fig78_compression_error      | Figures 7/8                  |
+| roofline_report              | deliverable (g)              |
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="longer training runs")
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args(argv)
+
+    from . import (fig4_bandwidth_model, fig78_compression_error,
+                   roofline_report, table1_recovery, table2_bits_grid,
+                   table3_learned_levels, theory_convergence)
+
+    steps = "400" if args.full else None
+    suite = [
+        ("theory_convergence", theory_convergence.main, []),
+        ("table1_recovery", table1_recovery.main,
+         ["--steps", steps or "240"]),
+        ("table2_bits_grid", table2_bits_grid.main,
+         (["--steps", steps or "160"] + (["--full"] if args.full else []))),
+        ("table3_learned_levels", table3_learned_levels.main,
+         ["--steps", steps or "160"]),
+        ("fig78_compression_error", fig78_compression_error.main,
+         ["--steps", steps or "160"]),
+        ("fig4_bandwidth_model", fig4_bandwidth_model.main, []),
+        ("roofline_report", roofline_report.main, []),
+    ]
+    failures = []
+    for name, fn, argv_i in suite:
+        if args.only and args.only != name:
+            continue
+        print("\n" + "=" * 72)
+        print(f"== benchmark: {name}")
+        print("=" * 72, flush=True)
+        t0 = time.time()
+        try:
+            rc = fn(argv_i)
+        except SystemExit as e:  # argparse in sub-benchmarks
+            rc = int(e.code or 0)
+        except Exception as e:
+            import traceback
+            traceback.print_exc()
+            rc = 1
+        print(f"== {name}: {'OK' if rc == 0 else 'FAIL'} ({time.time()-t0:.0f}s)")
+        if rc != 0:
+            failures.append(name)
+
+    print("\n" + "=" * 72)
+    if failures:
+        print("FAILED:", ", ".join(failures))
+    else:
+        print("ALL BENCHMARKS OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,70 @@
+"""Benchmark: Theorem 2 / Corollary 3 convergence (the paper's analytical
+core, Section 4).
+
+Produces the convergence table: quantized SGD with the random-shift weight
+quantizer converges to the lattice-optimum band; naive round-to-nearest on
+the coarse grid stalls; adding an unbiased gradient quantizer (Corollary 3)
+preserves convergence.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.theory import make_quadratic, run_qsgd, theorem2_params
+
+
+def main(argv=None, out_dir="results/bench"):
+    os.makedirs(out_dir, exist_ok=True)
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for kappa in (2.0, 4.0, 8.0):
+        obj = make_quadratic(key, n=64, kappa=kappa)
+        delta_star, eps = 0.5, 1e-3
+        params = theorem2_params(obj.alpha, obj.beta, delta_star, eps, 0.0,
+                                 f0_gap=float(obj.f(jnp.zeros(64))))
+        bench = obj.lattice_opt_value(delta_star, jax.random.PRNGKey(7))
+
+        def avg_final(weight_q, grad_q_delta=None, delta=None, n_seeds=8):
+            import dataclasses
+            p = params if delta is None else dataclasses.replace(params, delta=delta)
+            fs = [float(obj.f(run_qsgd(obj, jnp.zeros(64), p, jax.random.PRNGKey(s),
+                                       weight_q=weight_q, grad_q_delta=grad_q_delta)[0]))
+                  for s in range(n_seeds)]
+            return float(np.mean(fs))
+
+        f_shift = avg_final("shift")
+        f_none = avg_final("none")
+        f_rtn_coarse = avg_final("nearest", delta=delta_star)
+        f_shift_coarse = avg_final("shift", delta=delta_star)
+        f_gq = avg_final("shift", grad_q_delta=0.05)
+        rows.append(dict(
+            kappa=kappa, T=params.T, eta=params.eta, delta=params.delta,
+            lattice_opt=bench, shift=f_shift, unquantized=f_none,
+            rtn_coarse=f_rtn_coarse, shift_coarse=f_shift_coarse,
+            shift_gradquant=f_gq,
+            theorem_holds=bool(f_shift <= bench + eps + 1e-6),
+            gq_holds=bool(f_gq <= bench + eps + 1e-6),
+        ))
+
+    with open(os.path.join(out_dir, "theory_convergence.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print("\n# Theorem 2 convergence (f(x_T), avg of 8 seeds; target = lattice_opt + 1e-3)")
+    hdr = f"{'kappa':>6} {'T':>5} {'lattice_opt':>12} {'QSGD(shift)':>12} {'+gradQ':>10} {'RTN@d*':>10} {'shift@d*':>10} {'ok':>4}"
+    print(hdr)
+    for r in rows:
+        print(f"{r['kappa']:6.1f} {r['T']:5d} {r['lattice_opt']:12.5f} "
+              f"{r['shift']:12.5f} {r['shift_gradquant']:10.5f} "
+              f"{r['rtn_coarse']:10.5f} {r['shift_coarse']:10.5f} "
+              f"{'Y' if r['theorem_holds'] and r['gq_holds'] else 'N':>4}")
+    ok = all(r["theorem_holds"] and r["gq_holds"] for r in rows)
+    print("theorem2:", "PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

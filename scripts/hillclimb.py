@@ -1,0 +1,83 @@
+"""§Perf hillclimb driver: run one (arch, shape, mesh) pair under a named
+set of optimization knobs and print the roofline-term deltas vs baseline.
+
+  PYTHONPATH=src python scripts/hillclimb.py --arch qwen2_vl_72b \
+      --shape train_4k --variant attn_bf16 [--multi-pod]
+
+Variants compose QSDPConfig/engine knobs; results append to
+results/hillclimb.jsonl for the EXPERIMENTS.md §Perf log.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import argparse
+import json
+
+import dataclasses
+
+from repro.core.qsdp import QSDPConfig
+from repro.launch.dryrun import run_one
+
+VARIANTS = {
+    # paper-faithful QSDP baseline
+    "baseline": dict(),
+    # P1: bf16 attention matmul operands (f32 accumulation)
+    "attn_bf16": dict(attn_bf16=True),
+    # P1b: + remat policy saving dot outputs (less backward recompute)
+    "attn_bf16+dots": dict(attn_bf16=True, remat_policy="dots"),
+    "dots": dict(remat_policy="dots"),
+    # P2: serving-grade weight compression (4-bit gathers)
+    "w4": dict(weight_bits=4),
+    "w4g8": dict(weight_bits=4, grad_bits=8),
+    "w4g4": dict(weight_bits=4, grad_bits=4),
+    # bigger buckets: fewer scale/zero vectors on the wire
+    "bucket4096": dict(bucket_size=4096),
+    "w4_bucket4096": dict(weight_bits=4, bucket_size=4096),
+    # hierarchical 2-level collectives (multi-pod only)
+    "hierarchical": dict(hierarchical=True),
+    "attn_bf16+w4": dict(attn_bf16=True, weight_bits=4),
+    "bf16_wire_grads": dict(quantize_grads=False),  # fp path comparison
+    # dequantize gathered weights straight to bf16 (no f32 intermediate)
+    "deq_bf16": dict(dequant_to_compute=True),
+    "deq_bf16+w4": dict(dequant_to_compute=True, weight_bits=4),
+    "deq_bf16+attn_bf16": dict(dequant_to_compute=True, attn_bf16=True),
+    "deq_bf16+attn_bf16+dots": dict(dequant_to_compute=True, attn_bf16=True,
+                                    remat_policy="dots"),
+    "deq_bf16+w4_bucket4096": dict(dequant_to_compute=True, weight_bits=4,
+                                   bucket_size=4096),
+    "deq_bf16+hier": dict(dequant_to_compute=True, hierarchical=True),
+    "all_in": dict(dequant_to_compute=True, attn_bf16=True,
+                   remat_policy="dots", grad_bits=4),
+    "rng16": dict(rand_bits=16),
+    "attn_bf16+rng16": dict(attn_bf16=True, rand_bits=16),
+    "w4g4+rng16+bucket4096": dict(weight_bits=4, grad_bits=4, rand_bits=16,
+                                  bucket_size=4096),
+    "best_train": dict(attn_bf16=True, rand_bits=16, dequant_to_compute=True),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", required=True, choices=sorted(VARIANTS))
+    ap.add_argument("--n-micro", type=int, default=None)
+    ap.add_argument("--out", default="results/hillclimb.jsonl")
+    args = ap.parse_args()
+
+    qsdp = QSDPConfig(**VARIANTS[args.variant])
+    r = run_one(args.arch, args.shape, multi_pod=args.multi_pod, qsdp=qsdp,
+                n_micro=args.n_micro)
+    r["variant"] = args.variant
+    r["n_micro"] = args.n_micro
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "a") as f:
+        f.write(json.dumps(r) + "\n")
+    print(f"\nvariant={args.variant}: Tc={r['t_compute']*1e3:.1f}ms "
+          f"Tm=[{r['t_memory_min']*1e3:.1f},{r['t_memory']*1e3:.1f}]ms "
+          f"Tx={r['t_collective']*1e3:.1f}ms bound={r['bottleneck']} "
+          f"useful={r['useful_flops_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Resumable dry-run sweep: all (arch x shape x mesh) pairs -> JSONL.
+
+Each record is appended as soon as its pair compiles, so the sweep can be
+killed/restarted; pairs already present are skipped.
+
+  PYTHONPATH=src python scripts/run_dryrun_sweep.py [--out results/dryrun.jsonl]
+      [--meshes 16x16 2x16x16] [--archs ...] [--shapes ...] [--qsdp|--baseline]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import argparse
+import gc
+import json
+import sys
+import traceback
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--archs", nargs="*", default=None)
+    ap.add_argument("--shapes", nargs="*", default=None)
+    ap.add_argument("--meshes", nargs="*", default=["16x16", "2x16x16"])
+    ap.add_argument("--baseline", action="store_true")
+    ap.add_argument("--tag", default=None)
+    args = ap.parse_args()
+
+    from repro import configs
+    from repro.core.qsdp import QSDPConfig
+    from repro.launch.dryrun import run_one
+    from repro.models.config import SHAPES
+
+    qsdp = QSDPConfig.baseline() if args.baseline else QSDPConfig()
+    tag = args.tag or ("fsdp-baseline" if args.baseline else "qsdp-w8g8")
+
+    archs = args.archs or configs.ASSIGNED
+    shapes = args.shapes or list(SHAPES)
+
+    done = set()
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r.get("tag"), r["arch"], r["shape"], r["mesh"]))
+                except Exception:
+                    pass
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+
+    # cheap-first ordering: fewer layers x smaller d_model first
+    def cost(a):
+        c = configs.get_config(a)
+        return c.n_layers * c.d_model * max(c.d_model, 1)
+
+    pairs = [(a, s, m) for a in sorted(archs, key=cost) for s in shapes
+             for m in args.meshes]
+    for arch, shape, mesh_name in pairs:
+        key = (tag, arch, shape, mesh_name)
+        if key in done:
+            continue
+        mp = mesh_name == "2x16x16"
+        print(f"== {tag} {arch} x {shape} x {mesh_name}", flush=True)
+        try:
+            r = run_one(arch, shape, multi_pod=mp, qsdp=qsdp,
+                        hlo_dir=os.path.join(os.path.dirname(args.out) or ".", "hlo"),
+                        tag=tag)
+        except Exception as e:
+            traceback.print_exc()
+            r = dict(arch=arch, shape=shape, mesh=mesh_name, ok=False, error=str(e))
+        r["tag"] = tag
+        with open(args.out, "a") as f:
+            f.write(json.dumps(r) + "\n")
+        jax.clear_caches()
+        gc.collect()
+    print("sweep complete")
+
+
+if __name__ == "__main__":
+    main()

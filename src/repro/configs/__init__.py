@@ -1,0 +1,52 @@
+"""Architecture registry: the 10 assigned architectures + the paper's own
+GPT-2 family (125M / 350M / 1.3B), each with a reduced smoke variant.
+
+Every module defines CONFIG (the exact assigned config, source cited) and
+smoke() (2 layers, d_model <= 512, <= 4 experts) for CPU tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+from ..models.config import ModelConfig, ShapeConfig, SHAPES  # noqa: F401
+
+ARCHS = [
+    "qwen2_5_3b",
+    "yi_6b",
+    "seamless_m4t_large_v2",
+    "qwen1_5_32b",
+    "olmoe_1b_7b",
+    "yi_34b",
+    "zamba2_7b",
+    "qwen2_vl_72b",
+    "qwen3_moe_235b_a22b",
+    "mamba2_370m",
+    # paper's own models
+    "gpt_125m",
+    "gpt_350m",
+    "gpt_1_3b",
+]
+
+ASSIGNED = ARCHS[:10]
+
+_ALIAS = {a.replace("_", "-"): a for a in ARCHS}
+_ALIAS.update({"qwen2.5-3b": "qwen2_5_3b", "qwen1.5-32b": "qwen1_5_32b",
+               "olmoe-1b-7b": "olmoe_1b_7b", "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+               "gpt-1.3b": "gpt_1_3b"})
+
+
+def _mod(name: str):
+    key = _ALIAS.get(name, name).replace("-", "_").replace(".", "_")
+    return importlib.import_module(f".{key}", __package__)
+
+
+def get_config(name: str) -> ModelConfig:
+    return _mod(name).CONFIG
+
+
+def get_smoke(name: str) -> ModelConfig:
+    return _mod(name).smoke()
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)

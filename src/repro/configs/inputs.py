@@ -1,0 +1,83 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input of every
+(architecture x input-shape) pair — weak-type-correct, shardable, zero
+allocation.  This is what the multi-pod dry-run lowers against.
+
+Shape kinds:
+  train    -> train_step inputs  (tokens, labels [, modality stubs])
+  prefill  -> prefill_fn inputs  (tokens [, modality stubs])
+  decode   -> decode_fn inputs   (cache, tokens (B,), pos)
+
+Modality stubs (the one allowed carve-out):
+  vlm   -> vision_embeds (B, S, d) bf16 patch embeddings + vision_mask +
+           M-RoPE positions (3, B, S)
+  audio -> audio_embeds (B, S_enc, d) bf16 frame embeddings
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models.config import ModelConfig, ShapeConfig
+from ..models.decode import DecodeModel, make_decode_spec
+from ..models.transformer import Model
+
+
+def _token_batch(cfg: ModelConfig, b: int, s: int, batch_axes, with_labels: bool):
+    structs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    specs = {"tokens": P(batch_axes)}
+    if with_labels:
+        structs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        specs["labels"] = P(batch_axes)
+    if cfg.arch_type == "vlm":
+        structs["vision_embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        structs["vision_mask"] = jax.ShapeDtypeStruct((b, s), jnp.bool_)
+        structs["positions"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+        specs["vision_embeds"] = P(batch_axes)
+        specs["vision_mask"] = P(batch_axes)
+        specs["positions"] = P(None, batch_axes)
+    if cfg.arch_type == "audio":
+        s_enc = max(s // cfg.enc_frames_ratio, 1)
+        structs["audio_embeds"] = jax.ShapeDtypeStruct((b, s_enc, cfg.d_model), jnp.bfloat16)
+        specs["audio_embeds"] = P(batch_axes)
+    return structs, specs
+
+
+def input_specs(model: Model, shape: ShapeConfig):
+    """Returns (kind, arg_structs, arg_pspecs) where args are the non-param
+    positional inputs of the step to be lowered:
+
+      train:   (batch, key)
+      prefill: (batch, key)
+      decode:  (cache, tokens, pos, key)
+    """
+    ms = model.ms
+    cfg = model.cfg
+    fsdp = ms.fsdp_size
+    key_struct = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    if shape.kind == "train":
+        assert shape.global_batch % fsdp == 0, (shape.global_batch, fsdp)
+        structs, specs = _token_batch(cfg, shape.global_batch, shape.seq_len,
+                                      ms.fsdp_axes, with_labels=True)
+        return "train", (structs, key_struct), (specs, P())
+
+    dspec = make_decode_spec(model, shape)
+    bax = ms.fsdp_axes if dspec.batch_sharded else None
+
+    if shape.kind == "prefill":
+        structs, specs = _token_batch(cfg, shape.global_batch, shape.seq_len,
+                                      bax, with_labels=False)
+        if cfg.arch_type == "audio":
+            # decode-time cross-KV is capped; prefill uses the capped length
+            s_enc = dspec.enc_len or max(shape.seq_len // cfg.enc_frames_ratio, 1)
+            structs["audio_embeds"] = jax.ShapeDtypeStruct(
+                (shape.global_batch, s_enc, cfg.d_model), jnp.bfloat16)
+        return "prefill", (structs, key_struct), (specs, P())
+
+    # decode
+    dm = DecodeModel(model, dspec)
+    cache_structs, cache_specs = dm.cache_struct()
+    tok = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return "decode", (cache_structs, tok, pos, key_struct), (cache_specs, P(bax), P(), P())

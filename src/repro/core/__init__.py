@@ -1,0 +1,4 @@
+"""QSDP core: quantizers, quantized collectives, the FSDP engine, theory."""
+from . import collectives, levels, quant, qsdp, theory  # noqa: F401
+from .qsdp import MeshSpec, ParamSpec, QSDPConfig, QSDPEngine  # noqa: F401
+from .quant import QuantConfig, Quantized, dequantize, quantize  # noqa: F401

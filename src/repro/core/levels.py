@@ -1,0 +1,171 @@
+"""Learned quantization levels (paper Section 5.2, Algorithm 2).
+
+The paper's optional optimization: instead of the uniform grid, the
+locations of the ``2^b`` quantization levels are optimized with a fast
+SGD-style pass over the (bucket-normalized) values:
+
+    for each value v_i:
+        q_j = find_closest(v_i, Q)
+        q_j = q_j - lr * (q_j - v_i)
+
+We implement the exact per-value sequential rule (for small inputs / tests)
+and a vectorized minibatch variant (paper: batch 1024, lr 0.01) that applies
+the accumulated per-level update once per batch — the estimator the paper's
+implementation uses in practice.  Levels are learned per-layer after a
+warmup period and then frozen (App. C shows one learning pass suffices).
+
+Non-uniform encode/decode uses the same bucketed min-max normalization as
+`core.quant`, so learned levels drop into the same wire format: codes are
+indices into the level table, which is shipped once per (layer, refresh).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quant import QuantConfig, Quantized, _to_buckets, pack_codes, unpack_codes
+
+
+def uniform_levels(bits: int) -> jax.Array:
+    """Initial (uniform) level locations on the normalized [0, 1] range."""
+    return jnp.linspace(0.0, 1.0, 1 << bits)
+
+
+def _nearest_level(v: jax.Array, levels: jax.Array) -> jax.Array:
+    """Index of the closest level for each value (levels need not be sorted
+    during learning, so use argmin rather than searchsorted)."""
+    return jnp.argmin(jnp.abs(v[..., None] - levels), axis=-1)
+
+
+def learn_levels_minibatch(
+    values: jax.Array,
+    levels: jax.Array,
+    lr: float = 0.01,
+    batch_size: int = 1024,
+) -> jax.Array:
+    """One epoch of Algorithm 2 over `values` (already normalized to [0,1]).
+
+    Vectorized: for each minibatch, every value pulls its closest level
+    toward itself; per-level updates within a batch are averaged.  This is
+    the standard mean-shift relaxation of the sequential rule.
+    """
+    n = values.shape[0]
+    pad = (-n) % batch_size
+    v = jnp.pad(values, (0, pad))
+    valid = jnp.pad(jnp.ones((n,), jnp.float32), (0, pad))
+    v = v.reshape(-1, batch_size)
+    valid = valid.reshape(-1, batch_size)
+    k = levels.shape[0]
+
+    def body(lv, batch):
+        vb, mb = batch
+        idx = _nearest_level(vb, lv)
+        one_hot = jax.nn.one_hot(idx, k, dtype=jnp.float32) * mb[:, None]
+        cnt = jnp.sum(one_hot, axis=0)
+        mean_v = jnp.sum(one_hot * vb[:, None], axis=0) / jnp.maximum(cnt, 1.0)
+        # Applying the sequential rule to `cnt` values near `mean_v` moves the
+        # level by (1 - (1-lr)^cnt) of the way toward their mean; use that
+        # closed-form rate so one vectorized pass matches the paper's loop.
+        rate = 1.0 - (1.0 - lr) ** cnt
+        upd = jnp.where(cnt > 0, lv - rate * (lv - mean_v), lv)
+        return upd, None
+
+    levels, _ = jax.lax.scan(body, levels, (v, valid))
+    return levels
+
+
+def learn_levels_sequential(values: jax.Array, levels: jax.Array, lr: float = 0.01) -> jax.Array:
+    """The literal per-value loop of Algorithm 2 (reference / tests)."""
+
+    def body(lv, vi):
+        j = _nearest_level(vi, lv)
+        return lv.at[j].add(-lr * (lv[j] - vi)), None
+
+    levels, _ = jax.lax.scan(body, levels, values)
+    return levels
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelsConfig:
+    bits: int = 4
+    bucket_size: int = 1024
+    lr: float = 0.01
+    batch_size: int = 1024
+    epochs: int = 1
+    min_params: int = 100_000  # layers smaller than this stay uniform (App. C)
+
+
+def learn_levels_for_tensor(x: jax.Array, cfg: LevelsConfig) -> jax.Array:
+    """Learn a level table for one tensor, after bucket-wise normalization
+    (paper: 'Normalize values V bucket-wise')."""
+    buckets, size = _to_buckets(x, cfg.bucket_size)
+    lo = jnp.min(buckets, axis=1, keepdims=True)
+    hi = jnp.max(buckets, axis=1, keepdims=True)
+    v = ((buckets - lo) / jnp.maximum(hi - lo, 1e-12)).reshape(-1)[:size]
+    levels = uniform_levels(cfg.bits)
+    for _ in range(cfg.epochs):
+        levels = learn_levels_minibatch(v, levels, cfg.lr, cfg.batch_size)
+    return jnp.sort(levels)
+
+
+# ---------------------------------------------------------------------------
+# Non-uniform wire quantization with a level table.
+# ---------------------------------------------------------------------------
+
+
+def quantize_levels(
+    x: jax.Array,
+    levels: jax.Array,
+    bucket_size: int = 1024,
+    key: Optional[jax.Array] = None,
+) -> Quantized:
+    """Bucket-normalize then encode each value as the index of its nearest
+    level (optionally stochastic between the two neighbours, keeping the
+    estimator unbiased within the table's convex hull)."""
+    bits = int(np.log2(levels.shape[0]))
+    assert (1 << bits) == levels.shape[0], "level count must be a power of 2"
+    cfg = QuantConfig(bits=bits, bucket_size=bucket_size, mode="nearest")
+    buckets, size = _to_buckets(x, bucket_size)
+    lo = jnp.min(buckets, axis=1, keepdims=True)
+    hi = jnp.max(buckets, axis=1, keepdims=True)
+    scale = jnp.maximum(hi - lo, 1e-12)
+    v = (buckets - lo) / scale  # [0, 1]
+
+    srt = jnp.sort(levels)
+    # index of right neighbour in the sorted table
+    hi_idx = jnp.clip(jnp.searchsorted(srt, v, side="right"), 1, srt.shape[0] - 1)
+    lo_idx = hi_idx - 1
+    l_lo, l_hi = srt[lo_idx], srt[hi_idx]
+    frac = jnp.clip((v - l_lo) / jnp.maximum(l_hi - l_lo, 1e-12), 0.0, 1.0)
+    if key is None:  # nearest level
+        take_hi = frac > 0.5
+    else:  # unbiased stochastic assignment between neighbours
+        take_hi = jax.random.uniform(key, v.shape) < frac
+    codes = jnp.where(take_hi, hi_idx, lo_idx).astype(jnp.uint8)
+    return Quantized(
+        codes=pack_codes(codes, bits),
+        scale=scale[:, 0],
+        zero=lo[:, 0],
+        shape=tuple(x.shape),
+        size=size,
+        cfg=cfg,
+    )
+
+
+def dequantize_levels(q: Quantized, levels: jax.Array, dtype=jnp.float32) -> jax.Array:
+    srt = jnp.sort(levels)
+    codes = unpack_codes(q.codes, q.cfg.bits)
+    v = srt[codes]
+    x = v * q.scale[:, None] + q.zero[:, None]
+    return x.reshape(-1)[: q.size].reshape(q.shape).astype(dtype)
+
+
+def compression_error(x: jax.Array, xq: jax.Array) -> jax.Array:
+    """Relative L2 compression error (paper Figures 7/8 metric)."""
+    return jnp.linalg.norm((x - xq).reshape(-1)) / jnp.maximum(
+        jnp.linalg.norm(x.reshape(-1)), 1e-12
+    )

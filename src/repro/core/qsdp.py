@@ -1,0 +1,457 @@
+"""The QSDP engine: fully-sharded data-parallel parameters with quantized
+communication (the paper's contribution, as a composable JAX module).
+
+Layout
+------
+Every logical parameter (logical shape ``spec.shape``, optionally a scanned
+stack of ``spec.stack`` layers, optionally tensor-parallel along
+``spec.tp_axis``) is stored *at rest* in the distributed layout
+
+    (stack?, MODEL, FSDP, n_local)
+
+where ``n_local = ceil(prod(tp_local_shape) / FSDP)`` (zero-padded).  The
+shard_map in_spec for such a leaf is ``P(None?, "model", fsdp_axes, None)``,
+i.e. each device holds a flat f32 1/FSDP-slice of its tensor-parallel shard
+— exactly torch-FSDP's flat-parameter sharding, composed with Megatron TP.
+
+Inside the step (per device), :meth:`QSDPEngine.gather` reconstructs the
+TP-local tensor for one layer:
+
+    forward :  quantize(local shard) -> all-gather(codes+scales) -> dequant
+    backward:  quantize(grad chunks) -> all-to-all -> dequant-sum  (= quantized
+               reduce-scatter), divided by the FSDP size (data-parallel mean),
+               plus a psum over "model" for TP-replicated params.
+
+wrapped in ``jax.custom_vjp`` so the paper's 2×AllGather + 1×ReduceScatter
+per layer per step emerges naturally from ``jax.checkpoint``-rematerialized
+scan-over-layers.
+
+Filtering (paper Section 5): normalization layers / biases / any tensor
+smaller than ``min_quant_size`` travel in full precision, as do all tensors
+when the engine is configured as the *baseline FSDP* (fp32 weights / bf16
+gradients).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from . import collectives as coll
+from .quant import QuantConfig
+
+# ---------------------------------------------------------------------------
+# Mesh description
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """Static view of the training mesh.
+
+    axes/shape: as built by launch.mesh.make_production_mesh — either
+    ("data", "model") or ("pod", "data", "model").
+    """
+
+    axes: tuple[str, ...]
+    shape: tuple[int, ...]
+
+    @property
+    def multi_pod(self) -> bool:
+        return "pod" in self.axes
+
+    @property
+    def fsdp_axes(self) -> tuple[str, ...]:
+        # data-major ordering so hierarchical collectives (gather pod first,
+        # then data) land in the same element order as the flat tuple form.
+        return ("data", "pod") if self.multi_pod else ("data",)
+
+    @property
+    def model_axis(self) -> str:
+        return "model"
+
+    @property
+    def fsdp_size(self) -> int:
+        s = dict(zip(self.axes, self.shape))
+        return s["data"] * (s.get("pod", 1))
+
+    @property
+    def model_size(self) -> int:
+        return dict(zip(self.axes, self.shape))["model"]
+
+    @property
+    def batch_spec(self) -> P:
+        return P(self.fsdp_axes)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specification
+# ---------------------------------------------------------------------------
+
+InitKind = str  # "normal" | "zeros" | "ones" | "scaled_normal"
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One logical parameter of the model."""
+
+    shape: tuple[int, ...]  # logical (TP-global) shape, without stack dim
+    tp_axis: Optional[int] = None  # axis sharded over "model" (None = replicated)
+    stack: Optional[int] = None  # scan-over-layers length
+    init: InitKind = "normal"
+    init_scale: float = 0.02
+    quantize: bool = True  # False => always full-precision comm (norms/bias)
+    # True for model-REPLICATED params whose outputs are consumed
+    # rank-specifically (e.g. replicated KV projections, Mamba B/C): each
+    # model rank's gradient is then only a partial sum and the engine psums
+    # it over the model axis to keep the replicas consistent.
+    grad_sync_model: bool = False
+
+    def tp_local_shape(self, model_size: int) -> tuple[int, ...]:
+        if self.tp_axis is None:
+            return self.shape
+        assert self.shape[self.tp_axis] % model_size == 0, (self.shape, self.tp_axis, model_size)
+        s = list(self.shape)
+        s[self.tp_axis] //= model_size
+        return tuple(s)
+
+    def n_logical_local(self, model_size: int) -> int:
+        return int(np.prod(self.tp_local_shape(model_size)))
+
+    def n_local(self, ms: MeshSpec) -> int:
+        n = self.n_logical_local(ms.model_size)
+        return -(-n // ms.fsdp_size)  # ceil
+
+    def rest_shape(self, ms: MeshSpec) -> tuple[int, ...]:
+        base = (ms.model_size, ms.fsdp_size, self.n_local(ms))
+        return (self.stack, *base) if self.stack is not None else base
+
+    def rest_pspec(self, ms: MeshSpec) -> P:
+        base = ("model", ms.fsdp_axes, None)
+        return P(None, *base) if self.stack is not None else P(*base)
+
+    @property
+    def logical_size(self) -> int:
+        n = int(np.prod(self.shape))
+        return n * (self.stack or 1)
+
+
+def to_rest(full: jax.Array, spec: ParamSpec, ms: MeshSpec) -> jax.Array:
+    """Logical layout -> distributed rest layout (host-side / init / ckpt)."""
+    lead = 1 if spec.stack is not None else 0
+    x = full
+    if spec.tp_axis is not None:
+        ax = spec.tp_axis + lead
+        tp = ms.model_size
+        s = list(x.shape)
+        x = x.reshape(*s[:ax], tp, s[ax] // tp, *s[ax + 1 :])
+        x = jnp.moveaxis(x, ax, lead)  # (stack?, model, ...tp_local...)
+    else:
+        x = jnp.expand_dims(x, lead)
+        x = jnp.broadcast_to(x, (*x.shape[:lead], ms.model_size, *x.shape[lead + 1 :]))
+    # flatten tp-local part, pad, split over fsdp
+    batch_dims = x.shape[: lead + 1]
+    flat = x.reshape(*batch_dims, -1)
+    n = flat.shape[-1]
+    n_local = -(-n // ms.fsdp_size)
+    pad = n_local * ms.fsdp_size - n
+    if pad:
+        flat = jnp.pad(flat, [(0, 0)] * len(batch_dims) + [(0, pad)])
+    return flat.reshape(*batch_dims, ms.fsdp_size, n_local)
+
+
+def from_rest(rest: jax.Array, spec: ParamSpec, ms: MeshSpec) -> jax.Array:
+    """Distributed rest layout -> logical layout (checkpoint export/eval)."""
+    lead = 1 if spec.stack is not None else 0
+    batch_dims = rest.shape[: lead + 1]
+    flat = rest.reshape(*batch_dims, -1)
+    n = int(np.prod(spec.tp_local_shape(ms.model_size)))
+    flat = flat[..., :n]
+    x = flat.reshape(*batch_dims, *spec.tp_local_shape(ms.model_size))
+    if spec.tp_axis is None:
+        return x[:, 0] if lead else x[0]
+    ax = spec.tp_axis + lead
+    x = jnp.moveaxis(x, lead, ax)  # (stack?, ..., model, tp_local_dim, ...)
+    s = list(x.shape)
+    out = x.reshape(*s[:ax], s[ax] * s[ax + 1], *s[ax + 2 :])
+    return out
+
+
+def init_param(key: jax.Array, spec: ParamSpec, ms: MeshSpec, dtype=jnp.float32) -> jax.Array:
+    shape = ((spec.stack,) if spec.stack is not None else ()) + spec.shape
+    if spec.init == "zeros":
+        full = jnp.zeros(shape, dtype)
+    elif spec.init == "ones":
+        full = jnp.ones(shape, dtype)
+    elif spec.init == "constant":
+        full = jnp.full(shape, spec.init_scale, dtype)
+    elif spec.init == "normal":
+        full = jax.random.normal(key, shape, dtype) * spec.init_scale
+    elif spec.init == "scaled_normal":  # 1/sqrt(fan_in) init
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        full = jax.random.normal(key, shape, dtype) * (spec.init_scale / math.sqrt(fan_in))
+    else:
+        raise ValueError(spec.init)
+    return to_rest(full, spec, ms)
+
+
+# ---------------------------------------------------------------------------
+# Engine configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class QSDPConfig:
+    """Communication policy.  The paper's QSDP default is W8G8 bucket=1024;
+    `baseline()` reproduces the paper's FSDP baseline (fp32 weights / half-
+    precision gradients)."""
+
+    quantize_weights: bool = True
+    quantize_grads: bool = True
+    weight_bits: int = 8
+    grad_bits: int = 8
+    bucket_size: int = 1024
+    weight_mode: str = "shift"  # Definition 1
+    grad_mode: str = "stochastic"  # Definition 12
+    min_quant_size: int = 2048  # smaller tensors go full precision
+    weight_wire_dtype: str = "float32"  # fp path wire dtype for weights
+    grad_wire_dtype: str = "bfloat16"  # fp path wire dtype for grads (paper: fp16)
+    hierarchical: bool = False  # 2-level collectives over (pod, data)
+    compute_dtype: str = "bfloat16"
+    # activation-checkpoint policy for the scan-over-layers:
+    #   "full" — recompute everything in backward (min memory),
+    #   "dots" — save matmul outputs (jax.checkpoint_policies
+    #            .dots_with_no_batch_dims_saveable): ~25% less recompute
+    #            FLOPs for ~1 extra activation set per layer (§Perf).
+    remat_policy: str = "full"
+    # §Perf knob: bf16 attention matmul operands w/ f32 accumulation
+    attn_bf16: bool = False
+    # §Perf knob: dequantize gathered weights straight to the compute dtype
+    # (bf16), skipping the f32 intermediate — halves materialized weight
+    # bytes with zero information loss (codes are <=8 bits).
+    dequant_to_compute: bool = False
+    # §Perf knob: u16 stochastic-rounding thresholds (4x less RNG traffic)
+    rand_bits: int = 32
+
+    @classmethod
+    def baseline(cls) -> "QSDPConfig":
+        return cls(quantize_weights=False, quantize_grads=False)
+
+    @classmethod
+    def w8g8(cls, **kw) -> "QSDPConfig":
+        return cls(**kw)
+
+    def wcfg(self) -> QuantConfig:
+        return QuantConfig(bits=self.weight_bits, bucket_size=self.bucket_size,
+                           mode=self.weight_mode, rand_bits=self.rand_bits)
+
+    def gcfg(self) -> QuantConfig:
+        return QuantConfig(bits=self.grad_bits, bucket_size=self.bucket_size,
+                           mode=self.grad_mode, rand_bits=self.rand_bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class _GatherStatic:
+    """Hashable static payload for the custom_vjp gather."""
+
+    fsdp_axes: tuple[str, ...]
+    model_axis: str
+    grad_sync_model: bool
+    wcfg: Optional[QuantConfig]  # None => full-precision weight path
+    gcfg: Optional[QuantConfig]  # None => full-precision grad path
+    weight_wire_dtype: str
+    grad_wire_dtype: str
+    hierarchical: bool
+    gather_out_dtype: Optional[str] = None  # None => shard dtype (f32)
+
+    @property
+    def pod_axis(self) -> Optional[str]:
+        return "pod" if "pod" in self.fsdp_axes else None
+
+    @property
+    def inner_axes(self) -> tuple[str, ...]:
+        return tuple(a for a in self.fsdp_axes if a != "pod")
+
+
+# ---------------------------------------------------------------------------
+# The gather primitive (per-device; used inside shard_map)
+# ---------------------------------------------------------------------------
+
+
+def _gather_fwd_impl(flat: jax.Array, key: jax.Array, st: _GatherStatic) -> jax.Array:
+    out_dt = getattr(jnp, st.gather_out_dtype) if st.gather_out_dtype else None
+    if st.wcfg is None:
+        return coll.all_gather_fp(flat, st.fsdp_axes, getattr(jnp, st.weight_wire_dtype))
+    if st.hierarchical and st.pod_axis is not None:
+        return coll.all_gather_hierarchical(flat, st.pod_axis, st.inner_axes,
+                                            st.wcfg, key, out_dtype=out_dt)
+    return coll.all_gather_quantized(flat, st.fsdp_axes, st.wcfg, key,
+                                     out_dtype=out_dt)
+
+
+def _grad_rs_impl(ct: jax.Array, key: jax.Array, st: _GatherStatic) -> jax.Array:
+    # Gradient semantics (see core/tp.py docstring): the loss function returns
+    # the per-device local-batch mean with no collectives on the loss path;
+    # the cotangent arriving here is d(local loss)/d(full weight).  The
+    # reduce-scatter sums over the FSDP group and we divide by its size, so
+    # the result is exactly d(global-batch-mean loss)/d(shard).  Model-axis
+    # sums for TP-replicated params are owned by tp_copy's backward; the
+    # cotangent here is already identical across model ranks.
+    p = 1
+    for a in st.fsdp_axes:
+        p *= lax.axis_size(a)
+    if st.gcfg is None:
+        g = coll.reduce_scatter_fp(ct, st.fsdp_axes, getattr(jnp, st.grad_wire_dtype))
+    elif st.hierarchical and st.pod_axis is not None:
+        g = coll.reduce_scatter_hierarchical(ct, st.pod_axis, st.inner_axes, st.gcfg, key)
+    else:
+        g = coll.reduce_scatter_quantized(ct, st.fsdp_axes, st.gcfg, key)
+    g = g.astype(jnp.float32) / p
+    if st.grad_sync_model:
+        g = lax.psum(g, st.model_axis)
+    return g
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def qsdp_gather(flat: jax.Array, key: jax.Array, st: _GatherStatic) -> jax.Array:
+    """(n_local,) f32 shard -> (FSDP * n_local,) full flat tensor."""
+    return _gather_fwd_impl(flat, key, st)
+
+
+def _qsdp_gather_fwd(flat, key, st):
+    return _gather_fwd_impl(flat, key, st), key
+
+
+def _qsdp_gather_bwd(st, key, ct):
+    bkey = jax.random.fold_in(key, 0x5D)
+    d_flat = _grad_rs_impl(ct.astype(jnp.float32), bkey, st)
+    return d_flat, jnp.zeros_like(key)
+
+
+qsdp_gather.defvjp(_qsdp_gather_fwd, _qsdp_gather_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+class QSDPEngine:
+    """Binds a MeshSpec + QSDPConfig + parameter specs into gather callables
+    usable inside the shard_mapped step."""
+
+    def __init__(self, ms: MeshSpec, cfg: QSDPConfig, specs: dict[str, ParamSpec]):
+        self.ms = ms
+        self.cfg = cfg
+        self.specs = specs
+        self.compute_dtype = getattr(jnp, cfg.compute_dtype)
+
+    # -- static policy ------------------------------------------------------
+
+    def _is_quantized(self, spec: ParamSpec) -> bool:
+        return (
+            spec.quantize
+            and self.cfg.quantize_weights
+            and spec.n_logical_local(self.ms.model_size) >= self.cfg.min_quant_size
+        )
+
+    def _static_for(self, spec: ParamSpec) -> _GatherStatic:
+        quant = self._is_quantized(spec)
+        grad_quant = (
+            spec.quantize
+            and self.cfg.quantize_grads
+            and spec.n_logical_local(self.ms.model_size) >= self.cfg.min_quant_size
+        )
+        return _GatherStatic(
+            fsdp_axes=self.ms.fsdp_axes,
+            model_axis=self.ms.model_axis,
+            grad_sync_model=spec.grad_sync_model,
+            wcfg=self.cfg.wcfg() if quant else None,
+            gcfg=self.cfg.gcfg() if grad_quant else None,
+            weight_wire_dtype=self.cfg.weight_wire_dtype,
+            grad_wire_dtype=self.cfg.grad_wire_dtype,
+            hierarchical=self.cfg.hierarchical,
+            gather_out_dtype=(self.cfg.compute_dtype
+                              if getattr(self.cfg, "dequant_to_compute", False)
+                              else None),
+        )
+
+    # -- per-device ops (inside shard_map) -----------------------------------
+
+    def gather(self, name: str, local: jax.Array, key: jax.Array) -> jax.Array:
+        """Materialize the TP-local tensor for parameter `name` from its
+        per-device flat shard (shape (..., 1, 1, n_local) or (n_local,))."""
+        spec = self.specs[name]
+        flat = local.reshape(-1)
+        key = jax.random.fold_in(key, _stable_hash(name))
+        full = qsdp_gather(flat, key, self._static_for(spec))
+        n = spec.n_logical_local(self.ms.model_size)
+        w = full[:n].reshape(spec.tp_local_shape(self.ms.model_size))
+        return w.astype(self.compute_dtype)
+
+    def gather_layer(self, prefix: str, leaves: dict[str, jax.Array], key: jax.Array) -> dict[str, jax.Array]:
+        """Gather every parameter of one layer-dict."""
+        return {k: self.gather(f"{prefix}{k}", v, key) for k, v in leaves.items()}
+
+    # -- host-side helpers ----------------------------------------------------
+
+    def init_params(self, key: jax.Array) -> dict[str, jax.Array]:
+        out = {}
+        for i, (name, spec) in enumerate(sorted(self.specs.items())):
+            out[name] = init_param(jax.random.fold_in(key, i), spec, self.ms)
+        return out
+
+    def in_specs(self) -> dict[str, P]:
+        return {name: spec.rest_pspec(self.ms) for name, spec in self.specs.items()}
+
+    def param_bytes_per_device(self) -> int:
+        total = 0
+        for spec in self.specs.values():
+            total += int(np.prod(spec.rest_shape(self.ms))) // (self.ms.fsdp_size * self.ms.model_size)
+        return total * 4
+
+
+def _stable_hash(s: str) -> int:
+    h = 2166136261
+    for ch in s.encode():
+        h = (h ^ ch) * 16777619 & 0xFFFFFFFF
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Communication accounting (per step, analytic; feeds the Fig-4 model)
+# ---------------------------------------------------------------------------
+
+
+def step_comm_bytes(
+    engine: QSDPEngine, gathers_per_param: int = 2, reduces_per_param: int = 1
+) -> dict[str, int]:
+    """Per-device wire bytes of one optimizer step under the engine's policy
+    (2 weight all-gathers + 1 gradient reduce-scatter per param by default,
+    i.e. the FSDP schedule)."""
+    ms, cfg = engine.ms, engine.cfg
+    p = ms.fsdp_size
+    wbytes = rbytes = 0
+    for spec in engine.specs.values():
+        reps = spec.stack or 1
+        n_local_shard = spec.n_local(ms)
+        n_full = n_local_shard * p
+        wq = cfg.wcfg() if engine._is_quantized(spec) else None
+        gq = (
+            cfg.gcfg()
+            if (spec.quantize and cfg.quantize_grads
+                and spec.n_logical_local(ms.model_size) >= cfg.min_quant_size)
+            else None
+        )
+        wfp = 4 if cfg.weight_wire_dtype == "float32" else 2
+        gfp = 4 if cfg.grad_wire_dtype == "float32" else 2
+        wbytes += reps * gathers_per_param * coll.gather_wire_bytes(n_local_shard, p, wq, wfp)
+        rbytes += reps * reduces_per_param * coll.reduce_scatter_wire_bytes(n_full, p, gq, gfp)
+    return dict(weight_gather=wbytes, grad_reduce=rbytes, total=wbytes + rbytes)

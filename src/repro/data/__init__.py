@@ -1,0 +1,1 @@
+from .synthetic import SyntheticLM, batch_pspecs, make_batch  # noqa: F401

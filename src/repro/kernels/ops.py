@@ -1,0 +1,95 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+`interpret` defaults to True off-TPU (this container is CPU-only; on real
+TPU hardware pass interpret=False or set REPRO_PALLAS_INTERPRET=0).
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .dequant_matmul import rowquant_matmul_pallas
+from .quantize import ROWS_PER_TILE, dequantize_pallas, quantize_pallas
+
+
+def _default_interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x: jax.Array, mult: int) -> tuple[jax.Array, int]:
+    nb = x.shape[0]
+    pad = (-nb) % mult
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    return x, nb
+
+
+@partial(jax.jit, static_argnames=("levels", "stochastic", "interpret"))
+def quantize_buckets(
+    x: jax.Array,
+    rand: jax.Array,
+    levels: int = 255,
+    stochastic: bool = True,
+    interpret: bool | None = None,
+):
+    """Bucket-quantize a (nb, bucket) f32 array.  Returns (codes, scale, zero)
+    with scale/zero shaped (nb, 1)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    xp, nb = _pad_rows(x, ROWS_PER_TILE)
+    rp, _ = _pad_rows(rand, ROWS_PER_TILE)
+    codes, scale, zero = quantize_pallas(xp, rp, levels, stochastic, interpret=interpret)
+    return codes[:nb], scale[:nb], zero[:nb]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def dequantize_buckets(
+    codes: jax.Array, scale: jax.Array, zero: jax.Array, interpret: bool | None = None
+):
+    interpret = _default_interpret() if interpret is None else interpret
+    cp, nb = _pad_rows(codes, ROWS_PER_TILE)
+    sp, _ = _pad_rows(scale, ROWS_PER_TILE)
+    zp, _ = _pad_rows(zero, ROWS_PER_TILE)
+    out = dequantize_pallas(cp, sp, zp, interpret=interpret)
+    return out[:nb]
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
+def rowquant_matmul(
+    x: jax.Array,
+    codes: jax.Array,
+    scale: jax.Array,
+    zero: jax.Array,
+    block_m: int = 128,
+    block_n: int = 256,
+    block_k: int = 512,
+    interpret: bool | None = None,
+):
+    """y = x @ dequant(W) consuming u8 codes directly (see dequant_matmul.py).
+
+    Pads M/N/K up to tile multiples, so arbitrary shapes are accepted.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    m, k = x.shape
+    _, n = codes.shape
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    xp = jnp.pad(x, ((0, pm), (0, pk)))
+    cp = jnp.pad(codes, ((0, pk), (0, pn)))
+    sp = jnp.pad(scale, ((0, pk), (0, 0)))
+    zp = jnp.pad(zero, ((0, pk), (0, 0)))
+    out = rowquant_matmul_pallas(
+        xp, cp, sp, zp, block_m=bm, block_n=bn, block_k=bk, interpret=interpret
+    )
+    return out[:m, :n]
+
+
+def quantize_weight_rowwise(w: jax.Array, bits: int = 8):
+    """Host/one-time: per-K-row quantization producing the kernel layout."""
+    return ref.quantize_rowwise_ref(w, (1 << bits) - 1)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each function is the semantic ground truth a kernel must reproduce
+(tests assert allclose against these across shape/dtype sweeps).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_ref(
+    x: jax.Array, rand: jax.Array, levels: int, stochastic: bool
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Bucketed min-max quantization of a (nb, bucket) f32 array.
+
+    rand: (nb, bucket) uniforms in [0, 1) used when `stochastic`.
+    Returns (codes u8 (nb, bucket), scale f32 (nb, 1), zero f32 (nb, 1)).
+    """
+    lo = jnp.min(x, axis=1, keepdims=True)
+    hi = jnp.max(x, axis=1, keepdims=True)
+    scale = jnp.maximum((hi - lo) / levels, 1e-12)
+    v = (x - lo) / scale
+    if stochastic:
+        f = jnp.floor(v)
+        codes = f + (rand < (v - f)).astype(v.dtype)
+    else:
+        codes = jnp.round(v)
+    codes = jnp.clip(codes, 0, levels).astype(jnp.uint8)
+    return codes, scale, lo
+
+
+def dequantize_ref(
+    codes: jax.Array, scale: jax.Array, zero: jax.Array, dtype=jnp.float32
+) -> jax.Array:
+    """(nb, bucket) u8 codes + per-bucket affine -> values."""
+    return (codes.astype(jnp.float32) * scale + zero).astype(dtype)
+
+
+def rowquant_matmul_ref(
+    x: jax.Array, codes: jax.Array, scale: jax.Array, zero: jax.Array
+) -> jax.Array:
+    """y = x @ dequant(W) with per-K-row affine quantized W.
+
+    x: (M, K) f32/bf16; codes: (K, N) u8; scale/zero: (K, 1) f32.
+    dequant(W)[k, n] = codes[k, n] * scale[k] + zero[k].
+    """
+    w = codes.astype(jnp.float32) * scale + zero
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def quantize_rowwise_ref(w: jax.Array, levels: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-row (per input channel) min-max quantization of a (K, N) matrix —
+    the layout consumed by the fused dequant-matmul kernel."""
+    lo = jnp.min(w, axis=1, keepdims=True)
+    hi = jnp.max(w, axis=1, keepdims=True)
+    scale = jnp.maximum((hi - lo) / levels, 1e-12)
+    codes = jnp.clip(jnp.round((w - lo) / scale), 0, levels).astype(jnp.uint8)
+    return codes, scale, lo

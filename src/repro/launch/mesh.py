@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Target hardware: TPU v5e pods — 256 chips/pod (16x16), 2 pods for the
+multi-pod dry-run.  Defined as functions (never module-level constants) so
+importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+from ..core.qsdp import MeshSpec
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_spec(*, multi_pod: bool = False) -> MeshSpec:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return MeshSpec(axes=axes, shape=shape)
+
+
+def make_small_mesh(data: int = 2, model: int = 4):
+    """Test/CI mesh (requires xla_force_host_platform_device_count >= d*m)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_small_spec(data: int = 2, model: int = 4) -> MeshSpec:
+    return MeshSpec(axes=("data", "model"), shape=(data, model))

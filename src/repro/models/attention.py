@@ -1,0 +1,424 @@
+"""Attention: GQA with tensor parallelism, flash (chunked) attention for
+train/prefill, and sequence-sharded flash-decode for serving.
+
+TP layout
+---------
+Query heads are padded to a multiple of the model-axis size (`n_heads_padded`;
+e.g. qwen1.5-32b 40->48, yi-34b 56->64) and sharded contiguously; padded heads
+are hard-masked to zero so they never contribute (their params receive zero
+gradient, preserving the logical architecture exactly — see DESIGN.md §5).
+KV heads are TP-sharded when `n_kv % tp == 0` ("tp" mode), otherwise the
+KV projections are model-replicated ("replicated" mode) — the Megatron
+convention for GQA ratios that do not divide.
+
+Decode
+------
+The KV cache is sharded over the *model* axis along the sequence dim
+(uniform across all GQA ratios).  Each rank computes partial attention of
+all (gathered) query heads against its sequence chunk and the partials are
+combined with a log-sum-exp psum — flash-decoding.  Sliding windows are
+ring-buffered; slot validity is computed arithmetically from the step index
+so no position book-keeping tensors are needed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.tp import tp_copy, tp_reduce
+from .layers import apply_rope
+
+MODEL_AXIS = "model"
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    n_heads: int  # logical query heads
+    n_kv: int
+    head_dim: int
+    tp: int  # model-axis size
+    causal: bool = True
+    sliding_window: int = 0  # 0 = full
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    # feed the score/AV matmuls bf16 operands with f32 accumulation (MXU
+    # native) instead of f32 operands — §Perf hillclimb knob; the baseline
+    # stays f32 to match the unoptimized reference numerics.
+    mxu_bf16: bool = False
+
+    @property
+    def n_heads_padded(self) -> int:
+        return -(-self.n_heads // self.tp) * self.tp
+
+    @property
+    def heads_local(self) -> int:
+        return self.n_heads_padded // self.tp
+
+    @property
+    def kv_mode(self) -> str:
+        # TP the KV projections only when shards stay contiguous head blocks:
+        # that requires no query-head padding and an integral per-rank group.
+        ok = (
+            self.n_kv % self.tp == 0
+            and self.n_heads_padded == self.n_heads
+            and self.n_heads % self.n_kv == 0
+        )
+        return "tp" if ok else "replicated"
+
+    @property
+    def kv_local(self) -> int:
+        return self.n_kv // self.tp if self.kv_mode == "tp" else self.n_kv
+
+    @property
+    def group(self) -> int:
+        # logical GQA group (query heads per kv head); padded query heads are
+        # masked so their (clipped) kv index is irrelevant.
+        return max(self.n_heads // self.n_kv, 1)
+
+
+def _local_head_mask(cfg: AttnConfig) -> jax.Array:
+    """(heads_local,) 1.0 for real heads, 0.0 for padding (per rank)."""
+    rank = lax.axis_index(MODEL_AXIS)
+    gidx = rank * cfg.heads_local + jnp.arange(cfg.heads_local)
+    return (gidx < cfg.n_heads).astype(jnp.float32)
+
+
+def _expand_kv_local(k: jax.Array, cfg: AttnConfig) -> jax.Array:
+    """Map per-rank KV heads onto per-rank (local) query heads.
+
+    k: (..., kv_local, hd) -> (..., heads_local, hd)
+    """
+    if cfg.kv_mode == "tp":
+        # contiguous blocks: local q head j -> local kv head j // (group)
+        reps = cfg.heads_local // max(cfg.kv_local, 1)
+        if reps <= 0:  # more kv shards than q heads per rank cannot happen when mode == tp
+            raise AssertionError((cfg.heads_local, cfg.kv_local))
+        return jnp.repeat(k, reps, axis=-2)
+    # replicated: index kv by global q head
+    rank = lax.axis_index(MODEL_AXIS)
+    gidx = rank * cfg.heads_local + jnp.arange(cfg.heads_local)
+    kv_idx = jnp.clip(gidx // cfg.group, 0, cfg.n_kv - 1)
+    return jnp.take(k, kv_idx, axis=-2)
+
+
+# ---------------------------------------------------------------------------
+# Flash (chunked) attention — train & prefill
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Skv, H, D)  (already head-aligned with q)
+    v: jax.Array,
+    q_pos: jax.Array,  # (Sq,) global positions
+    kv_pos: jax.Array,  # (Skv,)
+    causal: bool,
+    window: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    mxu_bf16: bool = False,
+) -> jax.Array:
+    """Memory-bounded attention: outer scan over q chunks (rematerialized),
+    inner scan over kv chunks with running (max, sumexp, out)."""
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    cq = min(q_chunk, sq)
+    ckv = min(kv_chunk, skv)
+    assert sq % cq == 0 and skv % ckv == 0, (sq, cq, skv, ckv)
+    scale = 1.0 / math.sqrt(d)
+    nq, nk = sq // cq, skv // ckv
+
+    qc = q.reshape(b, nq, cq, h, d).transpose(1, 0, 2, 3, 4)
+    qp = q_pos.reshape(nq, cq)
+    kc = k.reshape(b, nk, ckv, h, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nk, ckv, h, d).transpose(1, 0, 2, 3, 4)
+    kp = kv_pos.reshape(nk, ckv)
+
+    def q_block(carry, qblk):
+        qi, qpi = qblk  # (B, Cq, H, D), (Cq,)
+
+        def kv_block(st, kblk):
+            m, l, o = st
+            ki, vi, kpi = kblk
+            if mxu_bf16:
+                # MXU-native: bf16 operands, f32 accumulation — halves
+                # score/probability operand traffic (perf hillclimb P1-1)
+                s = jnp.einsum("bqhd,bkhd->bhqk", qi, ki,
+                               preferred_element_type=jnp.float32)
+            else:
+                s = jnp.einsum("bqhd,bkhd->bhqk", qi.astype(jnp.float32),
+                               ki.astype(jnp.float32))
+            s = s * scale
+            msk = jnp.ones((cq, ckv), bool)
+            if causal:
+                msk &= qpi[:, None] >= kpi[None, :]
+            if window:
+                msk &= kpi[None, :] > qpi[:, None] - window
+            s = jnp.where(msk[None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows
+            m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(msk[None, None], p, 0.0)
+            corr = jnp.exp(jnp.where(jnp.isinf(m), 0.0, m) - m_safe) * (~jnp.isinf(m))
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            if mxu_bf16:
+                pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(qi.dtype), vi,
+                                preferred_element_type=jnp.float32)
+            else:
+                pv = jnp.einsum("bhqk,bkhd->bhqd", p, vi.astype(jnp.float32))
+            o_new = o * corr[..., None] + pv
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((b, h, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, cq), jnp.float32)
+        o0 = jnp.zeros((b, h, cq, d), jnp.float32)
+        (m, l, o), _ = lax.scan(jax.checkpoint(kv_block), (m0, l0, o0), (kc, vc, kp))
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        return carry, out.transpose(0, 2, 1, 3)  # (B, Cq, H, D)
+
+    _, outs = lax.scan(jax.checkpoint(q_block), (), (qc, qp))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Self-attention block (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def self_attention(
+    x: jax.Array,  # (B, S, d) replicated over model
+    w: dict,  # gathered TP-local weights: wq,wk,wv,wo (+ optional bq,bk,bv)
+    cfg: AttnConfig,
+    cos: jax.Array,
+    sin: jax.Array,
+    positions: jax.Array,  # (S,) int32
+    cache_slice: bool = False,
+):
+    """Returns (out (B,S,d), (k_full, v_full) if cache_slice else None).
+
+    k_full/v_full: (B, S, n_kv, hd) un-expanded KV (for prefill cache build),
+    rope-applied.
+    """
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    xi = tp_copy(x)
+    q = (xi @ w["wq"]) if "bq" not in w else (xi @ w["wq"] + w["bq"].astype(x.dtype))
+    q = q.reshape(b, s, cfg.heads_local, hd)
+    k = (xi @ w["wk"]) if "bk" not in w else (xi @ w["wk"] + w["bk"].astype(x.dtype))
+    v = (xi @ w["wv"]) if "bv" not in w else (xi @ w["wv"] + w["bv"].astype(x.dtype))
+    k = k.reshape(b, s, cfg.kv_local, hd)
+    v = v.reshape(b, s, cfg.kv_local, hd)
+
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    ke = _expand_kv_local(k, cfg)
+    ve = _expand_kv_local(v, cfg)
+    o = flash_attention(
+        q, ke, ve, positions, positions, cfg.causal, cfg.sliding_window,
+        cfg.q_chunk, cfg.kv_chunk, cfg.mxu_bf16,
+    )
+    o = o * _local_head_mask(cfg)[None, None, :, None].astype(o.dtype)
+    out = tp_reduce(o.reshape(b, s, cfg.heads_local * hd) @ w["wo"])
+    if not cache_slice:
+        return out, None
+    # full-KV view for the prefill cache (gather over model in "tp" mode)
+    if cfg.kv_mode == "tp":
+        k_full = lax.all_gather(k, MODEL_AXIS, axis=2, tiled=True)
+        v_full = lax.all_gather(v, MODEL_AXIS, axis=2, tiled=True)
+    else:
+        k_full, v_full = k, v
+    return out, (k_full, v_full)
+
+
+def cross_attention(
+    x: jax.Array,  # (B, S, d)
+    memory: jax.Array,  # (B, S_enc, d) encoder output
+    w: dict,  # wq,wk,wv,wo (+biases)
+    cfg: AttnConfig,
+):
+    """Encoder-decoder cross attention (no positional rotation, full mask)."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    xi = tp_copy(x)
+    mi = tp_copy(memory)
+    q = (xi @ w["wq"]).reshape(b, s, cfg.heads_local, hd)
+    k = (mi @ w["wk"]).reshape(b, memory.shape[1], cfg.kv_local, hd)
+    v = (mi @ w["wv"]).reshape(b, memory.shape[1], cfg.kv_local, hd)
+    ke = _expand_kv_local(k, cfg)
+    ve = _expand_kv_local(v, cfg)
+    s_pos = jnp.arange(s)
+    m_pos = jnp.arange(memory.shape[1])
+    o = flash_attention(q, ke, ve, s_pos, m_pos, causal=False, window=0,
+                        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                        mxu_bf16=cfg.mxu_bf16)
+    o = o * _local_head_mask(cfg)[None, None, :, None].astype(o.dtype)
+    return tp_reduce(o.reshape(b, s, cfg.heads_local * hd) @ w["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Flash-decode over a sequence-sharded KV cache
+# ---------------------------------------------------------------------------
+
+
+def decode_new_kv(x: jax.Array, w: dict, cfg: AttnConfig, cos, sin):
+    """Project this token's q (all padded heads, gathered) and full-head
+    k1/v1 on every rank.  Returns (q_all (B,Hp,hd), k1, v1 (B,n_kv,hd))."""
+    b, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ w["wq"]) if "bq" not in w else (x @ w["wq"] + w["bq"].astype(x.dtype))
+    q = q.reshape(b, cfg.heads_local, hd)
+    k1 = (x @ w["wk"]) if "bk" not in w else (x @ w["wk"] + w["bk"].astype(x.dtype))
+    v1 = (x @ w["wv"]) if "bv" not in w else (x @ w["wv"] + w["bv"].astype(x.dtype))
+    k1 = k1.reshape(b, cfg.kv_local, hd)
+    v1 = v1.reshape(b, cfg.kv_local, hd)
+    q = apply_rope(q[:, None], cos[None], sin[None])[:, 0]
+    k1 = apply_rope(k1[:, None], cos[None], sin[None])[:, 0]
+    q_all = lax.all_gather(q, MODEL_AXIS, axis=1, tiled=True)  # (B, Hp, hd)
+    if cfg.kv_mode == "tp":
+        k1 = lax.all_gather(k1, MODEL_AXIS, axis=1, tiled=True)
+        v1 = lax.all_gather(v1, MODEL_AXIS, axis=1, tiled=True)
+    return q_all, k1, v1
+
+
+def ring_slot(pos: jax.Array, window: int, s_loc: int):
+    """Ring-buffer addressing: (local slot index, is_mine flag)."""
+    rank = lax.axis_index(MODEL_AXIS)
+    slot = jnp.mod(pos, window)
+    owner = slot // s_loc
+    return slot - owner * s_loc, owner == rank
+
+
+def decode_attend(
+    q_all: jax.Array,  # (B, Hp, hd) — all (padded) query heads
+    k_cache: jax.Array,  # (B, S_loc, n_kv, hd) — this rank's seq chunk,
+    v_cache: jax.Array,  # current token's KV already written
+    cfg: AttnConfig,
+    pos: jax.Array,
+    window: int,
+):
+    """Flash-decode over the seq-sharded ring cache WITHOUT materializing a
+    GQA-expanded KV copy: real query heads are reshaped kv-major
+    (n_heads = n_kv * group always holds) and the score/AV einsums batch
+    over the kv-head axis directly against the un-expanded cache — this
+    removed a group-x cache-sized copy per layer (§Perf P2-2).  bf16
+    operands, f32 accumulation.  Returns (B, Hp, hd) f32 (padded heads
+    zero)."""
+    b, hp, hd = q_all.shape
+    s_loc = k_cache.shape[1]
+    rank = lax.axis_index(MODEL_AXIS)
+    g = cfg.group
+    qr = q_all[:, : cfg.n_heads].reshape(b, cfg.n_kv, g, hd)
+
+    # slot validity: slot s (global) holds position p_s = pos - ((pos-s) mod W)
+    s_glob = rank * s_loc + jnp.arange(s_loc)
+    p_s = pos - jnp.mod(pos - s_glob, window)
+    valid = p_s >= 0  # (S_loc,)
+
+    scale = 1.0 / math.sqrt(hd)
+    s_ij = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache.astype(qr.dtype),
+                      preferred_element_type=jnp.float32) * scale
+    s_ij = jnp.where(valid[None, None, None, :], s_ij, -jnp.inf)
+    m = lax.pmax(jnp.max(s_ij, axis=-1), MODEL_AXIS)  # (B, K, G)
+    m_safe = jnp.where(jnp.isinf(m), 0.0, m)
+    p = jnp.exp(s_ij - m_safe[..., None])
+    p = jnp.where(valid[None, None, None, :], p, 0.0)
+    l = lax.psum(jnp.sum(p, axis=-1), MODEL_AXIS)
+    o = lax.psum(
+        jnp.einsum("bkgs,bskd->bkgd", p.astype(q_all.dtype),
+                   v_cache.astype(q_all.dtype),
+                   preferred_element_type=jnp.float32),
+        MODEL_AXIS)
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    o = o.reshape(b, cfg.n_heads, hd)
+    if hp > cfg.n_heads:  # padded heads contribute zero
+        o = jnp.pad(o, ((0, 0), (0, hp - cfg.n_heads), (0, 0)))
+    return o
+
+
+def decode_out_proj(o: jax.Array, w: dict, cfg: AttnConfig, dtype) -> jax.Array:
+    """(B, Hp, hd) f32 attention output -> (B, d) via the TP-local slice of
+    the row-parallel wo + psum."""
+    b = o.shape[0]
+    rank = lax.axis_index(MODEL_AXIS)
+    o_loc = lax.dynamic_slice(
+        o, (0, rank * cfg.heads_local, 0), (b, cfg.heads_local, cfg.head_dim)
+    ).astype(dtype)
+    return lax.psum(o_loc.reshape(b, cfg.heads_local * cfg.head_dim) @ w["wo"],
+                    MODEL_AXIS)
+
+
+def decode_self_attention(
+    x: jax.Array,  # (B, d) current token hidden
+    w: dict,
+    cfg: AttnConfig,
+    k_cache: jax.Array,  # (B, S_loc, n_kv, hd) — this rank's seq chunk
+    v_cache: jax.Array,
+    pos: jax.Array,  # scalar int32 — index of the current token
+    cos: jax.Array,  # (hd//2,) rope at `pos`
+    sin: jax.Array,
+    window: int,  # ring size == S_loc * tp
+):
+    """One-token decode with the cache slices held by the caller.  Returns
+    (out (B,d), new_k_cache, new_v_cache) — the caller may instead use
+    decode_new_kv/ring_slot/decode_attend to write a scan-carried stacked
+    cache in place (models/decode.py does; see §Perf P2)."""
+    b, _ = x.shape
+    hd = cfg.head_dim
+    s_loc = k_cache.shape[1]
+    q_all, k1, v1 = decode_new_kv(x, w, cfg, cos, sin)
+    idx, is_mine = ring_slot(pos, window, s_loc)
+    mine = is_mine.astype(k_cache.dtype)
+    old_k = lax.dynamic_slice(k_cache, (0, idx, 0, 0), (b, 1, cfg.n_kv, hd))[:, 0]
+    old_v = lax.dynamic_slice(v_cache, (0, idx, 0, 0), (b, 1, cfg.n_kv, hd))[:, 0]
+    k_cache = lax.dynamic_update_slice(
+        k_cache, (mine * k1 + (1 - mine) * old_k)[:, None].astype(k_cache.dtype),
+        (0, idx, 0, 0))
+    v_cache = lax.dynamic_update_slice(
+        v_cache, (mine * v1 + (1 - mine) * old_v)[:, None].astype(v_cache.dtype),
+        (0, idx, 0, 0))
+    o = decode_attend(q_all, k_cache, v_cache, cfg, pos, window)
+    out = decode_out_proj(o, w, cfg, x.dtype)
+    return out, k_cache, v_cache
+
+
+def decode_cross_attention(
+    x: jax.Array,  # (B, d)
+    w: dict,
+    cfg: AttnConfig,
+    ck_cache: jax.Array,  # (B, S_enc_loc, n_kv, hd) precomputed encoder KV
+    cv_cache: jax.Array,
+    enc_len: jax.Array,  # scalar — valid encoder length
+):
+    b, _ = x.shape
+    hd = cfg.head_dim
+    s_loc = ck_cache.shape[1]
+    rank = lax.axis_index(MODEL_AXIS)
+    g = cfg.group
+    q = (x @ w["wq"]).reshape(b, cfg.heads_local, hd)
+    q_all = lax.all_gather(q, MODEL_AXIS, axis=1, tiled=True)
+    qr = q_all[:, : cfg.n_heads].reshape(b, cfg.n_kv, g, hd)
+    valid = (rank * s_loc + jnp.arange(s_loc)) < enc_len
+    scale = 1.0 / math.sqrt(hd)
+    s_ij = jnp.einsum("bkgd,bskd->bkgs", qr, ck_cache.astype(qr.dtype),
+                      preferred_element_type=jnp.float32) * scale
+    s_ij = jnp.where(valid[None, None, None, :], s_ij, -jnp.inf)
+    m = lax.pmax(jnp.max(s_ij, axis=-1), MODEL_AXIS)
+    m_safe = jnp.where(jnp.isinf(m), 0.0, m)
+    p = jnp.where(valid[None, None, None, :], jnp.exp(s_ij - m_safe[..., None]), 0.0)
+    l = lax.psum(jnp.sum(p, axis=-1), MODEL_AXIS)
+    o = lax.psum(
+        jnp.einsum("bkgs,bskd->bkgd", p.astype(q_all.dtype),
+                   cv_cache.astype(q_all.dtype),
+                   preferred_element_type=jnp.float32), MODEL_AXIS)
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    o = o.reshape(b, cfg.n_heads, hd)
+    if cfg.n_heads_padded > cfg.n_heads:
+        o = jnp.pad(o, ((0, 0), (0, cfg.n_heads_padded - cfg.n_heads), (0, 0)))
+    return decode_out_proj(o, w, cfg, x.dtype)

@@ -1,0 +1,582 @@
+"""Serving paths: prefill (build caches) and single-token decode for all six
+architecture families, wired through the QSDP engine.
+
+FSDP serving story (the paper's technique on the inference side): weights
+stay fully sharded at rest and are re-gathered — *quantized* — layer by
+layer inside every prefill/decode step.  Decode is therefore dominated by
+weight all-gather bytes, exactly the regime where QSDP's wire compression
+pays off most; the roofline benchmark quantifies this.
+
+Cache layouts (global shapes; per-device views inside shard_map):
+
+  attention KV  (L, B, S, n_kv, hd)   P(None, batch?, "model", None, None)
+                ring-buffered along S (full cache == ring that never wraps;
+                sliding-window long-context == ring of window size)
+  mamba conv    (L, B, K-1, tp * Cc)  P(None, batch?, None, "model")
+                with Cc = d_inner_local + 2N (each rank stores its own
+                slice; the 2N B/C section is per-rank replicated state)
+  mamba ssm     (L, B, H, P, N)       P(None, batch?, "model", None, None)
+  hybrid        mamba states (all layers) + per-group shared-block KV
+                (G, B, S, n_kv, hd)
+  audio         decoder self KV ring + static encoder cross KV
+                (L, B, S_enc, n_kv, hd) + enc_len scalar
+
+`batch?` is the FSDP axes when the global batch divides them (decode_32k),
+or replicated for tiny batches (long_500k's B=1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from . import attention as attn_mod
+from . import layers as L
+from . import mamba as mamba_mod
+from . import moe as moe_mod
+from .transformer import Model
+
+Params = dict[str, jax.Array]
+Cache = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeSpec:
+    """Static decode-time configuration for one (arch, shape) pair."""
+
+    cache_len: int  # ring size (== seq_len, or the sliding window)
+    batch_global: int
+    batch_sharded: bool  # shard batch over FSDP axes?
+    enc_len: int = 0  # audio: encoder memory length (capped)
+
+    def batch_pspec(self, ms) -> tuple:
+        return (ms.fsdp_axes,) if self.batch_sharded else (None,)
+
+
+def make_decode_spec(model: Model, shape) -> DecodeSpec:
+    """Derive the decode configuration from a ShapeConfig."""
+    cfg = model.cfg
+    s = shape.seq_len
+    if cfg.arch_type in ("ssm",):
+        cache_len = 0  # state is O(1); no KV ring
+    elif s > 65536 and cfg.long_context == "sliding_window":
+        cache_len = cfg.long_context_window
+    else:
+        cache_len = s
+    fsdp = model.ms.fsdp_size
+    return DecodeSpec(
+        cache_len=cache_len,
+        batch_global=shape.global_batch,
+        batch_sharded=shape.global_batch % fsdp == 0,
+        enc_len=min(4096, s // cfg.enc_frames_ratio) if cfg.arch_type == "audio" else 0,
+    )
+
+
+class DecodeModel:
+    """Per-device prefill / decode step functions for a bound Model."""
+
+    def __init__(self, model: Model, spec: DecodeSpec):
+        self.m = model
+        self.spec = spec
+        cfg = model.cfg
+        ms = model.ms
+        self.tp = ms.model_size
+        if cfg.has_attention:
+            assert spec.cache_len == 0 or spec.cache_len % self.tp == 0, (
+                spec.cache_len, self.tp)
+        self.s_loc = spec.cache_len // self.tp if spec.cache_len else 0
+        self.b_loc = (
+            spec.batch_global // ms.fsdp_size if spec.batch_sharded else spec.batch_global
+        )
+
+    # ------------------------------------------------------------------
+    # Cache shapes / pspecs (global views, for dryrun + init)
+    # ------------------------------------------------------------------
+
+    def cache_struct(self) -> tuple[Cache, Cache]:
+        """Returns (ShapeDtypeStruct tree, PartitionSpec tree) — global."""
+        m, cfg, sp = self.m, self.m.cfg, self.spec
+        ms = m.ms
+        bax = sp.batch_pspec(ms)[0]
+        B = sp.batch_global
+        structs: Cache = {}
+        specs: Cache = {}
+
+        def kv(prefix, layers, s):
+            shp = (layers, B, s, m.acfg.n_kv, cfg.head_dim)
+            structs[prefix + "k"] = jax.ShapeDtypeStruct(shp, jnp.bfloat16)
+            structs[prefix + "v"] = jax.ShapeDtypeStruct(shp, jnp.bfloat16)
+            specs[prefix + "k"] = P(None, bax, "model", None, None)
+            specs[prefix + "v"] = P(None, bax, "model", None, None)
+
+        if cfg.arch_type in ("dense", "vlm", "moe"):
+            kv("", cfg.n_layers, sp.cache_len)
+        elif cfg.arch_type == "ssm":
+            self._mamba_struct(structs, specs, cfg.n_layers, B, bax)
+        elif cfg.arch_type == "hybrid":
+            self._mamba_struct(structs, specs, cfg.n_layers, B, bax)
+            g = cfg.n_layers // cfg.hybrid_attn_every
+            kv("shared_", g, sp.cache_len)
+        elif cfg.arch_type == "audio":
+            kv("", cfg.n_layers, sp.cache_len)
+            shp = (cfg.n_layers, B, sp.enc_len, m.acfg.n_kv, cfg.head_dim)
+            structs["ck"] = jax.ShapeDtypeStruct(shp, jnp.bfloat16)
+            structs["cv"] = jax.ShapeDtypeStruct(shp, jnp.bfloat16)
+            specs["ck"] = P(None, bax, "model", None, None)
+            specs["cv"] = P(None, bax, "model", None, None)
+        else:
+            raise ValueError(cfg.arch_type)
+        return structs, specs
+
+    def _mamba_struct(self, structs, specs, layers, B, bax):
+        mc = self.m.mcfg
+        cc = mc.d_inner_local + 2 * mc.d_state
+        structs["conv"] = jax.ShapeDtypeStruct(
+            (layers, B, mc.conv_k - 1, self.tp * cc), jnp.float32)
+        specs["conv"] = P(None, bax, None, "model")
+        structs["ssm"] = jax.ShapeDtypeStruct(
+            (layers, B, mc.n_heads, mc.head_dim, mc.d_state), jnp.float32)
+        specs["ssm"] = P(None, bax, "model", None, None)
+
+    def init_cache_local(self) -> Cache:
+        """Per-device zero cache (inside shard_map) — used by tests."""
+        structs, _ = self.cache_struct()
+        ms = self.m.ms
+        out = {}
+        for k, st in structs.items():
+            shp = list(st.shape)
+            shp[1] = self.b_loc
+            if k in ("conv",):
+                shp[3] //= self.tp
+            elif k in ("ssm",):
+                shp[2] //= self.tp
+            else:  # kv
+                shp[2] //= self.tp
+            out[k] = jnp.zeros(shp, st.dtype)
+        return out
+
+    # ------------------------------------------------------------------
+    # Decode (one token)
+    # ------------------------------------------------------------------
+
+    def decode_fn(self, params: Params, cache: Cache, tokens: jax.Array,
+                  pos: jax.Array, key: jax.Array) -> tuple[jax.Array, Cache]:
+        """tokens (B_loc,) int32 current input; pos () int32 its position.
+        Returns (next_tokens (B_loc,), new_cache)."""
+        m, cfg = self.m, self.m.cfg
+        emb = m.engine.gather("embed", params["embed"], key)
+        x = L.embed_vocab_parallel(tokens[:, None], emb)[:, 0]  # (B, d)
+
+        cos, sin = self._decode_rope(pos)
+
+        if cfg.arch_type in ("dense", "vlm"):
+            x, cache = self._decode_attn_stack(params, "layers", x, cache, pos, cos, sin, key,
+                                               mlp="dense")
+        elif cfg.arch_type == "moe":
+            x, cache = self._decode_attn_stack(params, "layers", x, cache, pos, cos, sin, key,
+                                               mlp="moe")
+        elif cfg.arch_type == "ssm":
+            x, cache = self._decode_mamba_stack(params, x, cache, key)
+        elif cfg.arch_type == "hybrid":
+            x, cache = self._decode_hybrid(params, x, cache, pos, cos, sin, key)
+        elif cfg.arch_type == "audio":
+            x, cache = self._decode_audio(params, x, cache, pos, cos, sin, key)
+        else:
+            raise ValueError(cfg.arch_type)
+
+        fn = m.engine.gather("final_norm", params["final_norm"], key)
+        x = L.rms_norm(x, fn, cfg.norm_eps)
+        head = emb if cfg.tie_embeddings else m.engine.gather("lm_head", params["lm_head"], key)
+        logits = L.vocab_parallel_logits(x, head)
+        nxt = L.greedy_sample_vocab_parallel(logits, head.shape[0])
+        return nxt.astype(jnp.int32), cache
+
+    def _decode_rope(self, pos):
+        cfg = self.m.cfg
+        if not cfg.has_attention:
+            return None, None
+        if cfg.rope_mode == "mrope":
+            pos3 = jnp.broadcast_to(pos, (3,))
+            return L.mrope_cos_sin(pos3, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections)
+        return L.rope_cos_sin(pos, cfg.head_dim, cfg.rope_theta)
+
+    def _write_token_kv(self, kc_all, vc_all, layer, k1, v1, pos):
+        """Write this token's KV into the scan-carried stacked cache
+        (L, B, S_loc, n_kv, hd) at (layer, :, ring slot) — in-place DUS of
+        one token column (~KB) instead of re-emitting the whole cache as
+        scan ys (which cost 3 full-cache rewrites per step — §Perf P2-1)."""
+        b = k1.shape[0]
+        n_kv, hd = kc_all.shape[-2], kc_all.shape[-1]
+        s_loc = kc_all.shape[2]
+        idx, is_mine = attn_mod.ring_slot(pos, self.spec.cache_len, s_loc)
+        mine = is_mine.astype(kc_all.dtype)
+        old_k = lax.dynamic_slice(kc_all, (layer, 0, idx, 0, 0),
+                                  (1, b, 1, n_kv, hd))
+        old_v = lax.dynamic_slice(vc_all, (layer, 0, idx, 0, 0),
+                                  (1, b, 1, n_kv, hd))
+        new_k = mine * k1[None, :, None].astype(kc_all.dtype) + (1 - mine) * old_k
+        new_v = mine * v1[None, :, None].astype(vc_all.dtype) + (1 - mine) * old_v
+        kc_all = lax.dynamic_update_slice(kc_all, new_k, (layer, 0, idx, 0, 0))
+        vc_all = lax.dynamic_update_slice(vc_all, new_v, (layer, 0, idx, 0, 0))
+        return kc_all, vc_all
+
+    def _decode_attn_layer(self, x, w, kc_all, vc_all, layer, pos, cos, sin, mlp):
+        m, cfg = self.m, self.m.cfg
+        h = L.rms_norm(x, w["attn_norm"], cfg.norm_eps)
+        q_all, k1, v1 = attn_mod.decode_new_kv(h, w, m.acfg, cos, sin)
+        kc_all, vc_all = self._write_token_kv(kc_all, vc_all, layer, k1, v1, pos)
+        kc = lax.dynamic_index_in_dim(kc_all, layer, 0, keepdims=False)
+        vc = lax.dynamic_index_in_dim(vc_all, layer, 0, keepdims=False)
+        o = attn_mod.decode_attend(q_all, kc, vc, m.acfg, pos, self.spec.cache_len)
+        a = attn_mod.decode_out_proj(o, w, m.acfg, x.dtype)
+        x = x + a
+        h = L.rms_norm(x, w["mlp_norm"], cfg.norm_eps)
+        if mlp == "dense":
+            x = x + L.swiglu_mlp(h, w["w_gate"], w["w_up"], w["w_down"])
+        else:  # moe
+            y, _ = moe_mod.moe_layer(h, {k: w[k] for k in ("router", "w_gate", "w_up", "w_down")},
+                                     m.ecfg)
+            x = x + y
+        return x, kc_all, vc_all
+
+    def _decode_attn_stack(self, params, prefix, x, cache, pos, cos, sin, key, mlp):
+        m = self.m
+        grp = m._group(params, prefix)
+        names = list(grp.keys())
+
+        def body(carry, inp):
+            x, kc_all, vc_all = carry
+            idx, lw = inp
+            lkey = jax.random.fold_in(key, idx)
+            w = {n: m.engine.gather(f"{prefix}/{n}", lw[n], lkey) for n in names}
+            x, kc_all, vc_all = self._decode_attn_layer(
+                x, w, kc_all, vc_all, idx, pos, cos, sin, mlp)
+            return (x, kc_all, vc_all), None
+
+        nl = grp[names[0]].shape[0]
+        (x, k_new, v_new), _ = lax.scan(
+            body, (x, cache["k"], cache["v"]), (jnp.arange(nl), grp))
+        cache = dict(cache, k=k_new, v=v_new)
+        return x, cache
+
+    def _decode_mamba_layer(self, x, w, conv, ssm):
+        m, cfg = self.m, self.m.cfg
+        h = L.rms_norm(x, w["pre_norm"], cfg.norm_eps)
+        mw = {k: v for k, v in w.items() if k != "pre_norm"}
+        y, conv, ssm = mamba_mod.mamba2_decode(h, mw, m.mcfg, conv, ssm)
+        return x + y, conv, ssm
+
+    def _decode_mamba_stack(self, params, x, cache, key, prefix="layers",
+                            grp=None, conv=None, ssm=None, key_base=0,
+                            layer_offset=0):
+        """Scan mamba layers with the stacked (conv, ssm) state as CARRY,
+        updating each layer's slice in place (same rationale as the
+        attention cache — §Perf P2-1)."""
+        m = self.m
+        grp = grp if grp is not None else m._group(params, prefix)
+        names = list(grp.keys())
+        external = conv is not None
+        conv = conv if external else cache["conv"]
+        ssm = ssm if external else cache["ssm"]
+
+        def body(carry, inp):
+            x, conv_all, ssm_all = carry
+            idx, lw = inp
+            lkey = jax.random.fold_in(key, key_base + idx)
+            w = {n: m.engine.gather(f"{prefix}/{n}", lw[n], lkey) for n in names}
+            li = layer_offset + idx
+            cv = lax.dynamic_index_in_dim(conv_all, li, 0, keepdims=False)
+            st = lax.dynamic_index_in_dim(ssm_all, li, 0, keepdims=False)
+            x, cv, st = self._decode_mamba_layer(x, w, cv, st)
+            conv_all = lax.dynamic_update_slice_in_dim(
+                conv_all, cv[None].astype(conv_all.dtype), li, 0)
+            ssm_all = lax.dynamic_update_slice_in_dim(
+                ssm_all, st[None].astype(ssm_all.dtype), li, 0)
+            return (x, conv_all, ssm_all), None
+
+        nl = grp[names[0]].shape[0]
+        (x, conv_new, ssm_new), _ = lax.scan(
+            body, (x, conv, ssm), (jnp.arange(nl), grp))
+        if not external:
+            return x, dict(cache, conv=conv_new, ssm=ssm_new)
+        return x, conv_new, ssm_new
+
+    def _decode_hybrid(self, params, x, cache, pos, cos, sin, key):
+        m, cfg = self.m, self.m.cfg
+        every = cfg.hybrid_attn_every
+        n_groups, rem = divmod(cfg.n_layers, every)
+        grp = m._group(params, "layers")
+        main = {k: v[: n_groups * every].reshape(n_groups, every, *v.shape[1:])
+                for k, v in grp.items()}
+        tail = {k: v[n_groups * every:] for k, v in grp.items()}
+
+        shared_names = [n for n in
+                        ["attn_norm", "wq", "wk", "wv", "wo", "bq", "bk", "bv",
+                         "mlp_norm", "w_gate", "w_up", "w_down"]
+                        if f"shared/{n}" in params]
+        mamba_names = list(grp.keys())
+
+        def group_body(carry, inp):
+            x, conv_all, ssm_all, kc_all, vc_all = carry
+            gidx, gw = inp
+            gkey = jax.random.fold_in(key, 1000 + gidx)
+
+            def layer_body(inner, inp2):
+                x, conv_all, ssm_all = inner
+                li_in_g, lw = inp2
+                lkey = jax.random.fold_in(gkey, li_in_g)
+                w = {n: m.engine.gather(f"layers/{n}", lw[n], lkey)
+                     for n in mamba_names}
+                li = gidx * every + li_in_g
+                cv = lax.dynamic_index_in_dim(conv_all, li, 0, keepdims=False)
+                st = lax.dynamic_index_in_dim(ssm_all, li, 0, keepdims=False)
+                x, cv, st = self._decode_mamba_layer(x, w, cv, st)
+                conv_all = lax.dynamic_update_slice_in_dim(
+                    conv_all, cv[None].astype(conv_all.dtype), li, 0)
+                ssm_all = lax.dynamic_update_slice_in_dim(
+                    ssm_all, st[None].astype(ssm_all.dtype), li, 0)
+                return (x, conv_all, ssm_all), None
+
+            (x, conv_all, ssm_all), _ = lax.scan(
+                layer_body, (x, conv_all, ssm_all), (jnp.arange(every), gw))
+            skey = jax.random.fold_in(key, 5000 + gidx)
+            w = {n: m.engine.gather(f"shared/{n}", params[f"shared/{n}"], skey)
+                 for n in shared_names}
+            x, kc_all, vc_all = self._decode_attn_layer(
+                x, w, kc_all, vc_all, gidx, pos, cos, sin, "dense")
+            return (x, conv_all, ssm_all, kc_all, vc_all), None
+
+        (x, conv_new, ssm_new, k_new, v_new), _ = lax.scan(
+            group_body,
+            (x, cache["conv"], cache["ssm"], cache["shared_k"], cache["shared_v"]),
+            (jnp.arange(n_groups), main))
+        if rem:
+            x, conv_new, ssm_new = self._decode_mamba_stack(
+                params, x, None, jax.random.fold_in(key, 2000), grp=tail,
+                conv=conv_new, ssm=ssm_new, layer_offset=n_groups * every)
+        return x, dict(cache, conv=conv_new, ssm=ssm_new,
+                       shared_k=k_new, shared_v=v_new)
+
+    def _decode_audio(self, params, x, cache, pos, cos, sin, key):
+        m, cfg = self.m, self.m.cfg
+        grp = m._group(params, "dec")
+        names = list(grp.keys())
+        enc_len = jnp.asarray(self.spec.enc_len, jnp.int32)
+
+        def body(carry, inp):
+            x, kc_all, vc_all = carry
+            idx, lw, ck, cv = inp
+            lkey = jax.random.fold_in(key, idx)
+            w = {n: m.engine.gather(f"dec/{n}", lw[n], lkey) for n in names}
+            h = L.rms_norm(x, w["attn_norm"], cfg.norm_eps)
+            q_all, k1, v1 = attn_mod.decode_new_kv(h, w, m.acfg, cos, sin)
+            kc_all, vc_all = self._write_token_kv(kc_all, vc_all, idx, k1, v1, pos)
+            kc = lax.dynamic_index_in_dim(kc_all, idx, 0, keepdims=False)
+            vc = lax.dynamic_index_in_dim(vc_all, idx, 0, keepdims=False)
+            o = attn_mod.decode_attend(q_all, kc, vc, m.acfg, pos, self.spec.cache_len)
+            x = x + attn_mod.decode_out_proj(o, w, m.acfg, x.dtype)
+            h = L.rms_norm(x, w["xattn_norm"], cfg.norm_eps)
+            xw = {"wq": w["xwq"], "wk": w["xwk"], "wv": w["xwv"], "wo": w["xwo"]}
+            x = x + attn_mod.decode_cross_attention(h, xw, m.acfg, ck, cv, enc_len)
+            h = L.rms_norm(x, w["mlp_norm"], cfg.norm_eps)
+            x = x + L.swiglu_mlp(h, w["w_gate"], w["w_up"], w["w_down"])
+            return (x, kc_all, vc_all), None
+
+        nl = grp[names[0]].shape[0]
+        (x, k_new, v_new), _ = lax.scan(
+            body, (x, cache["k"], cache["v"]),
+            (jnp.arange(nl), grp, cache["ck"], cache["cv"]))
+        return x, dict(cache, k=k_new, v=v_new)
+
+    # ------------------------------------------------------------------
+    # Prefill (build caches from a full prompt)
+    # ------------------------------------------------------------------
+
+    def prefill_fn(self, params: Params, batch: dict, key: jax.Array
+                   ) -> tuple[jax.Array, Cache]:
+        """batch: same leaves as training minus labels.  Returns
+        (next_tokens (B_loc,) from the last position, cache)."""
+        m, cfg = self.m, self.m.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        if self.m.cfg.has_attention:
+            assert self.spec.cache_len >= s, "prefill prompt exceeds the cache ring"
+        emb = m.engine.gather("embed", params["embed"], key)
+        x = L.embed_vocab_parallel(tokens, emb)
+        if cfg.arch_type == "vlm":
+            x = jnp.where(batch["vision_mask"][..., None],
+                          batch["vision_embeds"].astype(x.dtype), x)
+        positions = jnp.arange(s)
+        cos, sin = m._rope(batch, s)
+
+        cache: Cache = {}
+        if cfg.arch_type in ("dense", "vlm", "moe"):
+            x, cache = self._prefill_attn_stack(params, "layers", x, key, cos, sin, positions,
+                                                mlp="moe" if cfg.is_moe else "dense")
+        elif cfg.arch_type == "ssm":
+            x, conv, ssm = self._prefill_mamba_stack(params, x, key)
+            cache = {"conv": conv, "ssm": ssm}
+        elif cfg.arch_type == "hybrid":
+            x, cache = self._prefill_hybrid(params, x, key, cos, sin, positions)
+        elif cfg.arch_type == "audio":
+            x, cache = self._prefill_audio(params, batch, x, key, cos, sin, positions)
+        else:
+            raise ValueError(cfg.arch_type)
+
+        fn = m.engine.gather("final_norm", params["final_norm"], key)
+        h = L.rms_norm(x[:, -1], fn, cfg.norm_eps)
+        head = emb if cfg.tie_embeddings else m.engine.gather("lm_head", params["lm_head"], key)
+        logits = L.vocab_parallel_logits(h, head)
+        nxt = L.greedy_sample_vocab_parallel(logits, head.shape[0])
+        return nxt.astype(jnp.int32), cache
+
+    def _slice_seq(self, kv: jax.Array) -> jax.Array:
+        """(B, S, n_kv, hd) full-seq KV -> this rank's S_loc ring chunk
+        (zero-padded when the prompt is shorter than the ring)."""
+        rank = lax.axis_index("model")
+        b, s, nk, hd = kv.shape
+        pad = self.spec.cache_len - s
+        if pad:
+            kv = jnp.pad(kv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return lax.dynamic_slice(kv, (0, rank * self.s_loc, 0, 0),
+                                 (b, self.s_loc, nk, hd))
+
+    def _prefill_attn_layer(self, x, w, cos, sin, positions, mlp):
+        m, cfg = self.m, self.m.cfg
+        h = L.rms_norm(x, w["attn_norm"], cfg.norm_eps)
+        a, (kf, vf) = attn_mod.self_attention(h, w, m.acfg, cos, sin, positions,
+                                              cache_slice=True)
+        x = x + a
+        h = L.rms_norm(x, w["mlp_norm"], cfg.norm_eps)
+        if mlp == "dense":
+            x = x + L.swiglu_mlp(h, w["w_gate"], w["w_up"], w["w_down"])
+        else:
+            bb, ss, d = h.shape
+            y, _ = moe_mod.moe_layer(h.reshape(bb * ss, d),
+                                     {k: w[k] for k in ("router", "w_gate", "w_up", "w_down")},
+                                     m.ecfg)
+            x = x + y.reshape(bb, ss, d)
+        kc = self._slice_seq(kf).astype(jnp.bfloat16)
+        vc = self._slice_seq(vf).astype(jnp.bfloat16)
+        return x, kc, vc
+
+    def _prefill_attn_stack(self, params, prefix, x, key, cos, sin, positions, mlp):
+        m = self.m
+        grp = m._group(params, prefix)
+        names = list(grp.keys())
+
+        def body(x, inp):
+            idx, lw = inp
+            lkey = jax.random.fold_in(key, idx)
+            w = {n: m.engine.gather(f"{prefix}/{n}", lw[n], lkey) for n in names}
+            x, kc, vc = self._prefill_attn_layer(x, w, cos, sin, positions, mlp)
+            return x, (kc, vc)
+
+        nl = grp[names[0]].shape[0]
+        x, (k, v) = lax.scan(jax.checkpoint(body), x, (jnp.arange(nl), grp))
+        return x, {"k": k, "v": v}
+
+    def _prefill_mamba_stack(self, params, x, key, prefix="layers", grp=None, key_base=0):
+        m, cfg = self.m, self.m.cfg
+        grp = grp if grp is not None else m._group(params, prefix)
+        names = list(grp.keys())
+
+        def body(x, inp):
+            idx, lw = inp
+            lkey = jax.random.fold_in(key, key_base + idx)
+            w = {n: m.engine.gather(f"{prefix}/{n}", lw[n], lkey) for n in names}
+            h = L.rms_norm(x, w["pre_norm"], cfg.norm_eps)
+            mw = {k: v for k, v in w.items() if k != "pre_norm"}
+            y, (cx, cbc, hf) = mamba_mod.mamba2_block(h, mw, m.mcfg, return_state=True)
+            conv = jnp.concatenate([cx, cbc.astype(cx.dtype)], axis=-1).astype(jnp.float32)
+            return x + y, (conv, hf.astype(jnp.float32))
+
+        nl = grp[names[0]].shape[0]
+        x, (conv, ssm) = lax.scan(jax.checkpoint(body), x, (jnp.arange(nl), grp))
+        return x, conv, ssm
+
+    def _prefill_hybrid(self, params, x, key, cos, sin, positions):
+        m, cfg = self.m, self.m.cfg
+        every = cfg.hybrid_attn_every
+        n_groups, rem = divmod(cfg.n_layers, every)
+        grp = m._group(params, "layers")
+        main = {k: v[: n_groups * every].reshape(n_groups, every, *v.shape[1:])
+                for k, v in grp.items()}
+        tail = {k: v[n_groups * every:] for k, v in grp.items()}
+        shared_names = [n for n in
+                        ["attn_norm", "wq", "wk", "wv", "wo", "bq", "bk", "bv",
+                         "mlp_norm", "w_gate", "w_up", "w_down"]
+                        if f"shared/{n}" in params]
+
+        def group_body(x, inp):
+            gidx, gw = inp
+            gkey = jax.random.fold_in(key, 1000 + gidx)
+            x, conv, ssm = self._prefill_mamba_stack(params, x, gkey, grp=gw)
+            skey = jax.random.fold_in(key, 5000 + gidx)
+            w = {n: m.engine.gather(f"shared/{n}", params[f"shared/{n}"], skey)
+                 for n in shared_names}
+            x, kc, vc = self._prefill_attn_layer(x, w, cos, sin, positions, "dense")
+            return x, (conv, ssm, kc, vc)
+
+        x, (cm, sm, k, v) = lax.scan(jax.checkpoint(group_body), x, (jnp.arange(n_groups), main))
+        conv = cm.reshape(n_groups * every, *cm.shape[2:])
+        ssm = sm.reshape(n_groups * every, *sm.shape[2:])
+        if rem:
+            x, ct, st = self._prefill_mamba_stack(
+                params, x, jax.random.fold_in(key, 2000), grp=tail)
+            conv = jnp.concatenate([conv, ct], axis=0)
+            ssm = jnp.concatenate([ssm, st], axis=0)
+        return x, {"conv": conv, "ssm": ssm, "shared_k": k, "shared_v": v}
+
+    def _prefill_audio(self, params, batch, x, key, cos, sin, positions):
+        m, cfg = self.m, self.m.cfg
+        audio = batch["audio_embeds"].astype(m.compute_dtype)
+        b, s_enc, _ = audio.shape
+        cos_e, sin_e = L.rope_cos_sin(jnp.arange(s_enc), cfg.head_dim, cfg.rope_theta)
+        mem = m._scan_layers(params, "enc", audio, key, cos_e, sin_e,
+                             jnp.arange(s_enc), m._enc_layer)
+        efn = m.engine.gather("enc_final_norm", params["enc_final_norm"], key)
+        mem = L.rms_norm(mem, efn, cfg.norm_eps)
+
+        grp = m._group(params, "dec")
+        names = list(grp.keys())
+        dec = m._dec_layer_factory(mem)
+
+        def body(x, inp):
+            idx, lw = inp
+            lkey = jax.random.fold_in(key, idx)
+            w = {n: m.engine.gather(f"dec/{n}", lw[n], lkey) for n in names}
+            # self-attn with cache slice
+            h = L.rms_norm(x, w["attn_norm"], cfg.norm_eps)
+            a, (kf, vf) = attn_mod.self_attention(h, w, m.acfg, cos, sin, positions,
+                                                  cache_slice=True)
+            x = x + a
+            h = L.rms_norm(x, w["xattn_norm"], cfg.norm_eps)
+            xw = {"wq": w["xwq"], "wk": w["xwk"], "wv": w["xwv"], "wo": w["xwo"]}
+            x = x + attn_mod.cross_attention(h, mem, xw, m.acfg)
+            h = L.rms_norm(x, w["mlp_norm"], cfg.norm_eps)
+            x = x + L.swiglu_mlp(h, w["w_gate"], w["w_up"], w["w_down"])
+            # cross-KV cache: computed from memory with this layer's weights
+            mi = mem
+            ck = (mi @ w["xwk"]).reshape(b, s_enc, m.acfg.kv_local, cfg.head_dim)
+            cvv = (mi @ w["xwv"]).reshape(b, s_enc, m.acfg.kv_local, cfg.head_dim)
+            if m.acfg.kv_mode == "tp":
+                ck = lax.all_gather(ck, "model", axis=2, tiled=True)
+                cvv = lax.all_gather(cvv, "model", axis=2, tiled=True)
+            rank = lax.axis_index("model")
+            e_loc = self.spec.enc_len // self.tp
+            ck = lax.dynamic_slice(ck, (0, rank * e_loc, 0, 0),
+                                   (b, e_loc, m.acfg.n_kv, cfg.head_dim))
+            cvv = lax.dynamic_slice(cvv, (0, rank * e_loc, 0, 0),
+                                    (b, e_loc, m.acfg.n_kv, cfg.head_dim))
+            kc = self._slice_seq(kf).astype(jnp.bfloat16)
+            vc = self._slice_seq(vf).astype(jnp.bfloat16)
+            return x, (kc, vc, ck.astype(jnp.bfloat16), cvv.astype(jnp.bfloat16))
+
+        nl = grp[names[0]].shape[0]
+        x, (k, v, ck, cv) = lax.scan(jax.checkpoint(body), x, (jnp.arange(nl), grp))
+        return x, {"k": k, "v": v, "ck": ck, "cv": cv}

@@ -1,0 +1,245 @@
+"""Mamba2 (state-space duality) mixer — chunked SSD scan for training and
+O(1)-state recurrence for decode.
+
+TP layout: the inner dimension (d_inner = expand * d_model, heads of size
+head_dim) is sharded over the model axis; B/C projections (n_groups = 1,
+shared across heads) and their convs are model-replicated.  The recurrent
+state never crosses devices — the paper's QSDP technique applies unchanged
+to the projection weights (DESIGN.md §5), while the scan itself is local.
+
+The chunked SSD algorithm follows Dao & Gu (2024), Listing 1:
+  y_t = C_t^T h_t,  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T
+split into intra-chunk (quadratic within a chunk, via the 1-semiseparable
+mask L) and inter-chunk (state recurrence over chunk summaries).
+The gated RMSNorm is applied per-head (group-norm style) so normalization
+never needs a cross-rank reduction; this is noted as a deviation from the
+reference implementation's full-width norm in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.tp import tp_copy, tp_reduce
+
+MODEL_AXIS = "model"
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_state: int  # N
+    head_dim: int  # P
+    expand: int
+    conv_k: int
+    chunk: int
+    tp: int
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+    @property
+    def heads_local(self) -> int:
+        assert self.n_heads % self.tp == 0, (self.n_heads, self.tp)
+        return self.n_heads // self.tp
+
+    @property
+    def d_inner_local(self) -> int:
+        return self.heads_local * self.head_dim
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, C); w: (C, K)."""
+    b, s, c = x.shape
+    k = w.shape[1]
+    y = lax.conv_general_dilated(
+        x,
+        w[:, None, :].transpose(2, 1, 0),  # (K, 1, C) -> spec below
+        window_strides=(1,),
+        padding=[(k - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=c,
+    )
+    return y
+
+
+def segsum_decay(da_cs: jax.Array) -> jax.Array:
+    """L[..., i, j, h] = exp(cumsum_i - cumsum_j) masked to j <= i."""
+    q = da_cs.shape[2]
+    diff = da_cs[:, :, :, None, :] - da_cs[:, :, None, :, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P) f32
+    dt: jax.Array,  # (B, S, H) f32, post-softplus (>= 0)
+    a: jax.Array,  # (H,) f32, negative
+    bmat: jax.Array,  # (B, S, N)
+    cmat: jax.Array,  # (B, S, N)
+    chunk: int,
+    h0: jax.Array | None = None,  # (B, H, P, N) initial state
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        # pad to a chunk multiple with dt=0 steps: decay exp(0·a)=1 and the
+        # contribution dt·B·x = 0, so the final state is exactly preserved.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        s_orig = s
+        s = s + pad
+    else:
+        s_orig = s
+    l = s // q
+    xc = x.reshape(b, l, q, h, p)
+    dtc = dt.reshape(b, l, q, h)
+    bc = bmat.reshape(b, l, q, n)
+    cc = cmat.reshape(b, l, q, n)
+
+    da = dtc * a  # (b,l,q,h)
+    da_cs = jnp.cumsum(da, axis=2)
+
+    # intra-chunk (quadratic, chunk-local)
+    decay = segsum_decay(da_cs)  # (b,l,q,q,h)
+    scores = jnp.einsum("blin,bljn->blij", cc, bc)
+    att = scores[..., None] * decay * dtc[:, :, None, :, :]
+    y = jnp.einsum("blijh,bljhp->blihp", att, xc)
+
+    # chunk summary states
+    decay_to_end = jnp.exp(da_cs[:, :, -1:, :] - da_cs)  # (b,l,q,h)
+    s_chunk = jnp.einsum("bljn,bljh,bljhp->blhpn", bc, dtc * decay_to_end, xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])  # (b,l,h)
+
+    def step(hprev, inp):
+        s_c, dec = inp
+        return hprev * dec[:, :, None, None] + s_c, hprev
+
+    init = jnp.zeros((b, h, p, n), x.dtype) if h0 is None else h0
+    hfinal, hprevs = lax.scan(
+        step,
+        init,
+        (s_chunk.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)  # (b,l,h,p,n)
+    y = y + jnp.einsum("blin,blih,blhpn->blihp", cc, jnp.exp(da_cs), hprevs)
+    return y.reshape(b, s, h, p)[:, :s_orig], hfinal
+
+
+def _gated_headnorm(y: jax.Array, z: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Per-head RMSNorm of y * silu(z).  y/z: (B, S, H, P); w: (H*P,) local."""
+    b, s, h, p = y.shape
+    g = y * jax.nn.silu(z)
+    var = jnp.mean(g.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    g = (g.astype(jnp.float32) * lax.rsqrt(var + eps)).astype(y.dtype)
+    return g.reshape(b, s, h * p) * w.astype(y.dtype)
+
+
+def mamba2_block(
+    x: jax.Array,  # (B, S, d) replicated over model
+    w: dict,
+    cfg: MambaConfig,
+    return_state: bool = False,
+):
+    """Train/prefill forward.  Weight dict (gathered, TP-local):
+    w_z, w_x: (d, d_inner_local); w_bc: (d, 2N); w_dt: (d, H_local);
+    conv_x: (d_inner_local, K); conv_bc: (2N, K); a_log, dt_bias, d_skip:
+    (H_local,); norm: (d_inner_local,); w_out: (d_inner_local, d).
+    """
+    b, s, _ = x.shape
+    hl, p, n = cfg.heads_local, cfg.head_dim, cfg.d_state
+    xi = tp_copy(x)
+    z = xi @ w["w_z"]  # (B,S,d_il)
+    xin = xi @ w["w_x"]
+    # B/C weights are model-replicated but their outputs feed rank-LOCAL
+    # heads (rank-specific consumption), so the path goes through tp_copy
+    # and w_bc/conv_bc carry grad_sync_model=True in their ParamSpecs.
+    bc = (xi @ w["w_bc"]).astype(jnp.float32)  # (B,S,2N)
+    dt_raw = xi @ w["w_dt"]  # (B,S,H_local)
+
+    xin_raw, bc_raw = xin, bc  # pre-conv inputs (decode conv-state seeds)
+    xin = _causal_conv(xin, w["conv_x"].astype(xin.dtype))
+    xin = jax.nn.silu(xin)
+    bc = _causal_conv(bc, w["conv_bc"].astype(bc.dtype))
+    bc = jax.nn.silu(bc)
+    bmat, cmat = bc[..., :n], bc[..., n:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + w["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(w["a_log"].astype(jnp.float32))  # (H_local,)
+
+    xh = xin.reshape(b, s, hl, p).astype(jnp.float32)
+    y, h_final = ssd_chunked(xh, dt, a, bmat, cmat, cfg.chunk)
+    y = y + xh * w["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.astype(x.dtype)
+
+    g = _gated_headnorm(y, z.reshape(b, s, hl, p), w["norm"])
+    out = tp_reduce(g @ w["w_out"])
+    if not return_state:
+        return out
+    k = cfg.conv_k
+    conv_x_state = xin_raw[:, s - (k - 1):, :]  # (B, K-1, d_il)
+    conv_bc_state = bc_raw[:, s - (k - 1):, :].astype(x.dtype)  # (B, K-1, 2N)
+    return out, (conv_x_state, conv_bc_state, h_final)
+
+
+def mamba2_decode(
+    x: jax.Array,  # (B, d)
+    w: dict,
+    cfg: MambaConfig,
+    conv_state: jax.Array,  # (B, K-1, d_inner_local + 2N)
+    ssm_state: jax.Array,  # (B, H_local, P, N) f32
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token recurrent step.  Returns (out, conv_state, ssm_state)."""
+    b, _ = x.shape
+    hl, p, n = cfg.heads_local, cfg.head_dim, cfg.d_state
+    z = x @ w["w_z"]
+    xin = x @ w["w_x"]
+    bc = x @ w["w_bc"]
+    dt_raw = x @ w["w_dt"]
+
+    # conv over the ring of the last K-1 inputs + current
+    cat = jnp.concatenate([xin, bc.astype(xin.dtype)], axis=-1)  # (B, C)
+    hist = jnp.concatenate([conv_state, cat[:, None]], axis=1)  # (B, K, C)
+    conv_w = jnp.concatenate(
+        [w["conv_x"], w["conv_bc"].astype(w["conv_x"].dtype)], axis=0
+    )  # (C, K)
+    conv_out = jnp.einsum("bkc,ck->bc", hist.astype(jnp.float32), conv_w.astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out)
+    new_conv_state = hist[:, 1:]
+
+    d_il = cfg.d_inner_local
+    xin_c = conv_out[:, :d_il]
+    bmat = conv_out[:, d_il : d_il + n]
+    cmat = conv_out[:, d_il + n :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + w["dt_bias"].astype(jnp.float32))  # (B,Hl)
+    a = -jnp.exp(w["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)  # (B,Hl)
+    xh = xin_c.reshape(b, hl, p)
+    new_state = ssm_state * da[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, bmat, xh
+    )
+    y = jnp.einsum("bn,bhpn->bhp", cmat, new_state)
+    y = y + xh * w["d_skip"].astype(jnp.float32)[None, :, None]
+
+    g = _gated_headnorm(
+        y[:, None].astype(x.dtype), z.reshape(b, 1, hl, p), w["norm"]
+    )[:, 0]
+    out = lax.psum(g @ w["w_out"], MODEL_AXIS)
+    return out, new_conv_state, new_state

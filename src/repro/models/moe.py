@@ -1,0 +1,142 @@
+"""Mixture-of-Experts layer with expert parallelism over the model axis.
+
+Dispatch is sort-based (no (T, E, C) one-hot tensors): assignments are
+sorted by expert id, positions within each expert computed by searchsorted,
+tokens over capacity dropped (standard capacity-factor semantics), and the
+(E, C, d) buffer exchanged with a single ``all_to_all`` so each rank runs
+only its E/tp local experts.  The return path is the inverse all_to_all and
+a weighted scatter-add combine.
+
+Gradient notes: all_to_all's builtin transpose is its inverse all_to_all
+(verified exact), scatter/gather transposes are gather/scatter — the whole
+layer is exactly differentiable.  Router weights are model-replicated and
+compute identically on every model rank, so their gradients agree across
+replicas without extra collectives.
+
+Expert weights are TP'd on the *expert* axis (tp_axis=0) and QSDP-gathered —
+in MoE models they dominate communication volume, which is exactly where the
+paper's quantized gathers pay off most (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core.tp import tp_merge_tokens, tp_reduce, tp_split_tokens
+
+MODEL_AXIS = "model"
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int  # per-expert hidden
+    tp: int
+    capacity_factor: float = 1.25
+    normalize_weights: bool = True  # Qwen3/OLMoE normalize top-k probs
+    aux_coef: float = 0.01
+
+    @property
+    def experts_local(self) -> int:
+        assert self.n_experts % self.tp == 0, (self.n_experts, self.tp)
+        return self.n_experts // self.tp
+
+    def capacity(self, n_tokens: int) -> int:
+        c = int(n_tokens * self.top_k * self.capacity_factor / self.n_experts)
+        return max(8, -(-c // 8) * 8)  # round up to 8 for tiling
+
+
+def moe_layer(
+    x: jax.Array,  # (T, d) tokens, replicated over model
+    w: dict,  # router (d, E) replicated; w_gate/w_up (E_loc, d, ff); w_down (E_loc, ff, d)
+    cfg: MoEConfig,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (out (T, d) replicated, aux_loss scalar identical on every
+    model rank).
+
+    Token parallelism over the model axis: the replicated token set is
+    SPLIT 1/tp per rank before routing (tp_split_tokens) so each token is
+    dispatched exactly once — without this every rank would route the same
+    tokens and expert FLOPs/all-to-all bytes would be duplicated tp x (a
+    16x waste at TP=16; caught by the roofline's useful-flops ratio).
+    Outputs are re-replicated with tp_merge_tokens (one all-gather, the
+    sequence-parallel pattern).  Router gradients flow from rank-specific
+    token slices, so the router ParamSpec must set grad_sync_model=True.
+    """
+    t_full, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    if cfg.tp > 1:
+        pad_t = (-t_full) % cfg.tp
+        if pad_t:
+            x = jnp.pad(x, ((0, pad_t), (0, 0)))
+        x = tp_split_tokens(x, 0)
+    t = x.shape[0]
+    c = cfg.capacity(t)
+
+    logits = x.astype(jnp.float32) @ w["router"].astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, tope = lax.top_k(probs, k)  # (T, k)
+    if cfg.normalize_weights:
+        topw = topw / jnp.maximum(jnp.sum(topw, axis=-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance auxiliary loss, averaged over the token
+    # slices of all model ranks (tp_reduce keeps it identical per rank; its
+    # identity-backward matches the rank-specific slice convention).
+    me = jnp.mean(probs, axis=0)  # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(tope, e, dtype=jnp.float32), axis=1), axis=0
+    )  # fraction routed per expert
+    aux = cfg.aux_coef * e * jnp.sum(me * ce)
+    if cfg.tp > 1:
+        aux = tp_reduce(aux) / cfg.tp
+
+    # ---- sort-based dispatch ----
+    tk = t * k
+    flat_e = tope.reshape(tk)
+    flat_w = topw.reshape(tk)
+    tok_idx = jnp.repeat(jnp.arange(t), k)
+    perm = jnp.argsort(flat_e, stable=True)
+    se = flat_e[perm]
+    sw = flat_w[perm]
+    st = tok_idx[perm]
+    starts = jnp.searchsorted(se, se, side="left")
+    pos = jnp.arange(tk) - starts
+    keep = pos < c
+    pos_c = jnp.where(keep, pos, 0)
+
+    vals = jnp.take(x, st, axis=0) * keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((e, c, d), x.dtype).at[se, pos_c].add(vals)
+
+    # ---- expert-parallel exchange ----
+    recv = lax.all_to_all(buf, MODEL_AXIS, split_axis=0, concat_axis=0, tiled=True)
+    # (E,C,d) rows grouped as (src_rank, E_loc): regroup to (E_loc, src*C, d)
+    recv = recv.reshape(cfg.tp, cfg.experts_local, c, d).transpose(1, 0, 2, 3)
+    recv = recv.reshape(cfg.experts_local, cfg.tp * c, d)
+
+    # ---- expert FFN (SwiGLU) ----
+    h_g = jnp.einsum("ecd,edf->ecf", recv, w["w_gate"].astype(x.dtype))
+    h_u = jnp.einsum("ecd,edf->ecf", recv, w["w_up"].astype(x.dtype))
+    h = jax.nn.silu(h_g) * h_u
+    y = jnp.einsum("ecf,efd->ecd", h, w["w_down"].astype(x.dtype))
+
+    # ---- return path ----
+    y = y.reshape(cfg.experts_local, cfg.tp, c, d).transpose(1, 0, 2, 3)
+    y = y.reshape(cfg.n_experts, c, d)
+    back = lax.all_to_all(y, MODEL_AXIS, split_axis=0, concat_axis=0, tiled=True)
+
+    # ---- combine ----
+    gathered = back[se, pos_c]  # (Tk, d)
+    gathered = gathered * (sw * keep.astype(jnp.float32)).astype(x.dtype)[:, None]
+    out = jnp.zeros((t, d), x.dtype).at[st].add(gathered)
+
+    # ---- re-replicate the token outputs over the model axis ----
+    if cfg.tp > 1:
+        out = tp_merge_tokens(out, 0)
+        if pad_t:
+            out = out[:t_full]
+    return out, aux

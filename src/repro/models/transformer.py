@@ -1,0 +1,404 @@
+"""Model composition: spec building + per-device forward functions for all
+six architecture families, wired through the QSDP engine.
+
+Everything in this file is *per-device* code executed inside shard_map.
+Parameters arrive in the engine's rest layout ((L?, 1, 1, n_local) local
+views) and are materialized per layer with quantized all-gathers inside the
+(rematerialized) scan over layers — reproducing FSDP's gather -> compute ->
+discard -> re-gather-in-backward schedule, with 2 AllGathers + 1
+ReduceScatter per layer per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from ..core.qsdp import MeshSpec, ParamSpec, QSDPConfig, QSDPEngine
+from . import attention as attn_mod
+from . import layers as L
+from . import mamba as mamba_mod
+from . import moe as moe_mod
+from .attention import AttnConfig
+from .config import ModelConfig, ShapeConfig
+from .mamba import MambaConfig
+from .moe import MoEConfig
+
+Params = dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Spec building
+# ---------------------------------------------------------------------------
+
+
+def _attn_specs(d: int, a: AttnConfig, stack: Optional[int], bias: bool, out_scale: float) -> dict[str, ParamSpec]:
+    hp = a.n_heads_padded * a.head_dim
+    kvd = a.n_kv * a.head_dim
+    kv_tp = a.kv_mode == "tp"
+    s: dict[str, ParamSpec] = {
+        "wq": ParamSpec((d, hp), tp_axis=1, stack=stack, init="scaled_normal", init_scale=1.0),
+        "wk": ParamSpec((d, kvd), tp_axis=1 if kv_tp else None, stack=stack,
+                        init="scaled_normal", init_scale=1.0, grad_sync_model=not kv_tp),
+        "wv": ParamSpec((d, kvd), tp_axis=1 if kv_tp else None, stack=stack,
+                        init="scaled_normal", init_scale=1.0, grad_sync_model=not kv_tp),
+        "wo": ParamSpec((hp, d), tp_axis=0, stack=stack, init="scaled_normal", init_scale=out_scale),
+    }
+    if bias:
+        s["bq"] = ParamSpec((hp,), tp_axis=0, stack=stack, init="zeros", quantize=False)
+        s["bk"] = ParamSpec((kvd,), tp_axis=0 if kv_tp else None, stack=stack, init="zeros",
+                            quantize=False, grad_sync_model=not kv_tp)
+        s["bv"] = ParamSpec((kvd,), tp_axis=0 if kv_tp else None, stack=stack, init="zeros",
+                            quantize=False, grad_sync_model=not kv_tp)
+    return s
+
+
+def _mlp_specs(d: int, ff: int, stack: Optional[int], out_scale: float) -> dict[str, ParamSpec]:
+    return {
+        "w_gate": ParamSpec((d, ff), tp_axis=1, stack=stack, init="scaled_normal", init_scale=1.0),
+        "w_up": ParamSpec((d, ff), tp_axis=1, stack=stack, init="scaled_normal", init_scale=1.0),
+        "w_down": ParamSpec((ff, d), tp_axis=0, stack=stack, init="scaled_normal", init_scale=out_scale),
+    }
+
+
+def _moe_specs(d: int, e: int, ffe: int, stack: Optional[int], out_scale: float) -> dict[str, ParamSpec]:
+    return {
+        # router consumes rank-specific token slices (token-parallel MoE
+        # dispatch) -> per-rank grads are partial sums over its slice
+        "router": ParamSpec((d, e), tp_axis=None, stack=stack, init="scaled_normal",
+                            init_scale=1.0, quantize=False, grad_sync_model=True),
+        "w_gate": ParamSpec((e, d, ffe), tp_axis=0, stack=stack, init="scaled_normal", init_scale=1.0),
+        "w_up": ParamSpec((e, d, ffe), tp_axis=0, stack=stack, init="scaled_normal", init_scale=1.0),
+        "w_down": ParamSpec((e, ffe, d), tp_axis=0, stack=stack, init="scaled_normal", init_scale=out_scale),
+    }
+
+
+def _mamba_specs(m: MambaConfig, stack: Optional[int], out_scale: float) -> dict[str, ParamSpec]:
+    d, din, h, n, k = m.d_model, m.d_inner, m.n_heads, m.d_state, m.conv_k
+    return {
+        "w_z": ParamSpec((d, din), tp_axis=1, stack=stack, init="scaled_normal", init_scale=1.0),
+        "w_x": ParamSpec((d, din), tp_axis=1, stack=stack, init="scaled_normal", init_scale=1.0),
+        "w_bc": ParamSpec((d, 2 * n), tp_axis=None, stack=stack, init="scaled_normal",
+                          init_scale=1.0, grad_sync_model=True),
+        "w_dt": ParamSpec((d, h), tp_axis=1, stack=stack, init="scaled_normal", init_scale=1.0),
+        "conv_x": ParamSpec((din, k), tp_axis=0, stack=stack, init="normal", init_scale=0.3,
+                            quantize=False),
+        "conv_bc": ParamSpec((2 * n, k), tp_axis=None, stack=stack, init="normal", init_scale=0.3,
+                             quantize=False, grad_sync_model=True),
+        "a_log": ParamSpec((h,), tp_axis=0, stack=stack, init="constant", init_scale=0.5,
+                           quantize=False),
+        "dt_bias": ParamSpec((h,), tp_axis=0, stack=stack, init="constant", init_scale=-4.0,
+                             quantize=False),
+        "d_skip": ParamSpec((h,), tp_axis=0, stack=stack, init="ones", quantize=False),
+        "norm": ParamSpec((din,), tp_axis=0, stack=stack, init="ones", quantize=False),
+        "w_out": ParamSpec((din, d), tp_axis=0, stack=stack, init="scaled_normal", init_scale=out_scale),
+    }
+
+
+def _norm_spec(d: int, stack: Optional[int]) -> ParamSpec:
+    return ParamSpec((d,), tp_axis=None, stack=stack, init="ones", quantize=False)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+class Model:
+    """Binds ModelConfig + MeshSpec + QSDPConfig into per-device step
+    functions and the parameter/cache layout."""
+
+    def __init__(self, cfg: ModelConfig, ms: MeshSpec, qcfg: QSDPConfig):
+        self.cfg = cfg
+        self.ms = ms
+        self.qcfg = qcfg
+        tp = ms.model_size
+        if cfg.has_attention:
+            self.acfg = AttnConfig(
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                tp=tp, causal=True, sliding_window=cfg.sliding_window,
+                mxu_bf16=getattr(qcfg, "attn_bf16", False),
+            )
+        if cfg.arch_type in ("ssm", "hybrid"):
+            self.mcfg = MambaConfig(
+                d_model=cfg.d_model, d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+                expand=cfg.ssm_expand, conv_k=cfg.ssm_conv, chunk=cfg.ssm_chunk, tp=tp,
+            )
+        if cfg.is_moe:
+            self.ecfg = MoEConfig(
+                n_experts=cfg.n_experts, top_k=cfg.moe_top_k, d_model=cfg.d_model,
+                d_ff=cfg.moe_d_ff, tp=tp, capacity_factor=cfg.moe_capacity_factor,
+                aux_coef=cfg.moe_aux_coef,
+            )
+        self.vp = cfg.padded_vocab(tp)
+        self.specs = self._build_specs()
+        self.engine = QSDPEngine(ms, qcfg, self.specs)
+        self.compute_dtype = self.engine.compute_dtype
+        if qcfg.remat_policy == "dots":
+            self.remat = partial(
+                jax.checkpoint,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:
+            self.remat = jax.checkpoint
+
+    # -- specs ---------------------------------------------------------------
+
+    def _build_specs(self) -> dict[str, ParamSpec]:
+        cfg = self.cfg
+        d = cfg.d_model
+        nl = cfg.n_layers
+        out_scale = 1.0 / np.sqrt(2 * max(nl, 1))
+        s: dict[str, ParamSpec] = {
+            "embed": ParamSpec((self.vp, d), tp_axis=0, init="normal", init_scale=0.02),
+            "final_norm": _norm_spec(d, None),
+        }
+        if not cfg.tie_embeddings:
+            s["lm_head"] = ParamSpec((self.vp, d), tp_axis=0, init="normal", init_scale=0.02)
+
+        def add(prefix: str, block: dict[str, ParamSpec]):
+            for k, v in block.items():
+                s[f"{prefix}/{k}"] = v
+
+        if cfg.arch_type in ("dense", "vlm"):
+            add("layers", _attn_specs(d, self.acfg, nl, cfg.qkv_bias, out_scale))
+            add("layers", _mlp_specs(d, cfg.d_ff, nl, out_scale))
+            s["layers/attn_norm"] = _norm_spec(d, nl)
+            s["layers/mlp_norm"] = _norm_spec(d, nl)
+        elif cfg.arch_type == "moe":
+            add("layers", _attn_specs(d, self.acfg, nl, cfg.qkv_bias, out_scale))
+            add("layers", _moe_specs(d, cfg.n_experts, cfg.moe_d_ff, nl, out_scale))
+            s["layers/attn_norm"] = _norm_spec(d, nl)
+            s["layers/mlp_norm"] = _norm_spec(d, nl)
+        elif cfg.arch_type == "ssm":
+            add("layers", _mamba_specs(self.mcfg, nl, out_scale))
+            s["layers/pre_norm"] = _norm_spec(d, nl)
+        elif cfg.arch_type == "hybrid":
+            add("layers", _mamba_specs(self.mcfg, nl, out_scale))
+            s["layers/pre_norm"] = _norm_spec(d, nl)
+            # the shared transformer block, re-gathered at every invocation
+            add("shared", _attn_specs(d, self.acfg, None, cfg.qkv_bias, out_scale))
+            add("shared", _mlp_specs(d, cfg.d_ff, None, out_scale))
+            s["shared/attn_norm"] = _norm_spec(d, None)
+            s["shared/mlp_norm"] = _norm_spec(d, None)
+        elif cfg.arch_type == "audio":
+            ne = cfg.n_enc_layers
+            add("enc", _attn_specs(d, self.acfg, ne, cfg.qkv_bias, out_scale))
+            add("enc", _mlp_specs(d, cfg.d_ff, ne, out_scale))
+            s["enc/attn_norm"] = _norm_spec(d, ne)
+            s["enc/mlp_norm"] = _norm_spec(d, ne)
+            s["enc_final_norm"] = _norm_spec(d, None)
+            add("dec", _attn_specs(d, self.acfg, nl, cfg.qkv_bias, out_scale))
+            add("dec", _mlp_specs(d, cfg.d_ff, nl, out_scale))
+            for k, v in _attn_specs(d, self.acfg, nl, cfg.qkv_bias, out_scale).items():
+                s[f"dec/x{k}"] = v  # cross-attention projections
+            s["dec/attn_norm"] = _norm_spec(d, nl)
+            s["dec/xattn_norm"] = _norm_spec(d, nl)
+            s["dec/mlp_norm"] = _norm_spec(d, nl)
+        else:
+            raise ValueError(cfg.arch_type)
+        return s
+
+    # -- param / input plumbing ----------------------------------------------
+
+    def init_params(self, key: jax.Array) -> Params:
+        return self.engine.init_params(key)
+
+    def param_pspecs(self) -> dict[str, P]:
+        return self.engine.in_specs()
+
+    def _group(self, params: Params, prefix: str) -> Params:
+        pl = len(prefix) + 1
+        return {k[pl:]: v for k, v in params.items() if k.startswith(prefix + "/")}
+
+    def _gather_block(self, params: Params, prefix: str, names: list[str], key: jax.Array) -> dict:
+        return {
+            n: self.engine.gather(f"{prefix}/{n}", params[f"{prefix}/{n}"], key)
+            for n in names
+            if f"{prefix}/{n}" in params
+        }
+
+    # ======================================================================
+    # Training
+    # ======================================================================
+
+    def loss_fn(self, params: Params, batch: dict, key: jax.Array) -> jax.Array:
+        """Per-device local-mean loss for one microbatch (see core/tp.py for
+        the gradient conventions)."""
+        cfg = self.cfg
+        if cfg.arch_type == "audio":
+            return self._loss_encdec(params, batch, key)
+        tokens = batch["tokens"]  # (B, S)
+        b, s = tokens.shape
+        emb = self.engine.gather("embed", params["embed"], key)
+        x = L.embed_vocab_parallel(tokens, emb)
+        if cfg.arch_type == "vlm":
+            x = jnp.where(batch["vision_mask"][..., None], batch["vision_embeds"].astype(x.dtype), x)
+        positions = jnp.arange(s)
+        cos, sin = self._rope(batch, s)
+
+        x = self._run_stack(params, x, key, cos, sin, positions)
+
+        fn = self.engine.gather("final_norm", params["final_norm"], key)
+        x = L.rms_norm(x, fn, cfg.norm_eps)
+        head = emb if cfg.tie_embeddings else self.engine.gather("lm_head", params["lm_head"], key)
+        loss = L.vocab_parallel_xent(
+            x.reshape(b * s, -1), head, batch["labels"].reshape(b * s)
+        )
+        if cfg.is_moe:
+            loss = loss + self._aux.astype(loss.dtype)
+        return loss
+
+    def _rope(self, batch: dict, s: int):
+        cfg = self.cfg
+        if not cfg.has_attention:
+            return None, None
+        if cfg.rope_mode == "mrope":
+            pos3 = batch["positions"]  # (3, B, S)
+            return L.mrope_cos_sin(pos3, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections)
+        return L.rope_cos_sin(jnp.arange(s), cfg.head_dim, cfg.rope_theta)
+
+    # -- layer stacks ----------------------------------------------------------
+
+    def _run_stack(self, params, x, key, cos, sin, positions):
+        cfg = self.cfg
+        if cfg.arch_type in ("dense", "vlm"):
+            return self._scan_layers(params, "layers", x, key, cos, sin, positions,
+                                     self._dense_layer)
+        if cfg.arch_type == "moe":
+            self._aux = jnp.zeros((), jnp.float32)
+            return self._scan_layers(params, "layers", x, key, cos, sin, positions,
+                                     self._moe_layer, carry_aux=True)
+        if cfg.arch_type == "ssm":
+            return self._scan_layers(params, "layers", x, key, cos, sin, positions,
+                                     self._mamba_layer)
+        if cfg.arch_type == "hybrid":
+            return self._hybrid_stack(params, x, key, cos, sin, positions)
+        raise ValueError(cfg.arch_type)
+
+    def _scan_layers(self, params, prefix, x, key, cos, sin, positions, layer_fn,
+                     carry_aux=False, group=None):
+        grp = group if group is not None else self._group(params, prefix)
+        names = list(grp.keys())
+        stack = grp[names[0]].shape[0]
+
+        def body(carry, inp):
+            idx, lw = inp
+            lkey = jax.random.fold_in(key, idx)
+            w = {n: self.engine.gather(f"{prefix}/{n}", lw[n], lkey) for n in names}
+            return layer_fn(carry, w, cos, sin, positions), None
+
+        init = (x, jnp.zeros((), jnp.float32)) if carry_aux else x
+        out, _ = lax.scan(self.remat(body), init, (jnp.arange(stack), grp))
+        if carry_aux:
+            x, self._aux = out
+            return x
+        return out
+
+    def _dense_layer(self, x, w, cos, sin, positions):
+        cfg = self.cfg
+        h = L.rms_norm(x, w["attn_norm"], cfg.norm_eps)
+        a, _ = attn_mod.self_attention(h, w, self.acfg, cos, sin, positions)
+        x = x + a
+        h = L.rms_norm(x, w["mlp_norm"], cfg.norm_eps)
+        return x + L.swiglu_mlp(h, w["w_gate"], w["w_up"], w["w_down"])
+
+    def _moe_layer(self, carry, w, cos, sin, positions):
+        x, aux = carry
+        cfg = self.cfg
+        h = L.rms_norm(x, w["attn_norm"], cfg.norm_eps)
+        a, _ = attn_mod.self_attention(h, w, self.acfg, cos, sin, positions)
+        x = x + a
+        h = L.rms_norm(x, w["mlp_norm"], cfg.norm_eps)
+        b, s, d = h.shape
+        moe_w = {k: w[k] for k in ("router", "w_gate", "w_up", "w_down")}
+        y, a_l = moe_mod.moe_layer(h.reshape(b * s, d), moe_w, self.ecfg)
+        return (x + y.reshape(b, s, d), aux + a_l)
+
+    def _mamba_layer(self, x, w, cos, sin, positions):
+        h = L.rms_norm(x, w["pre_norm"], self.cfg.norm_eps)
+        mw = {k: v for k, v in w.items() if k != "pre_norm"}
+        return x + mamba_mod.mamba2_block(h, mw, self.mcfg)
+
+    def _shared_block(self, params, x, key, cos, sin, positions):
+        w = self._gather_block(
+            params, "shared",
+            ["attn_norm", "wq", "wk", "wv", "wo", "bq", "bk", "bv",
+             "mlp_norm", "w_gate", "w_up", "w_down"], key)
+        return self._dense_layer(x, w, cos, sin, positions)
+
+    def _hybrid_stack(self, params, x, key, cos, sin, positions):
+        cfg = self.cfg
+        every = cfg.hybrid_attn_every
+        n_groups, rem = divmod(cfg.n_layers, every)
+        grp = self._group(params, "layers")
+        main = {k: v[: n_groups * every].reshape(n_groups, every, *v.shape[1:]) for k, v in grp.items()}
+        tail = {k: v[n_groups * every :] for k, v in grp.items()}
+
+        def group_body(x, inp):
+            gidx, gw = inp
+            gkey = jax.random.fold_in(key, 1000 + gidx)
+            x = self._scan_layers(params, "layers", x, gkey, cos, sin, positions,
+                                  self._mamba_layer, group=gw)
+            x = self._shared_block(params, x, gkey, cos, sin, positions)
+            return x, None
+
+        x, _ = lax.scan(self.remat(group_body), x, (jnp.arange(n_groups), main))
+        if rem:
+            x = self._scan_layers(params, "layers", x, jax.random.fold_in(key, 2000),
+                                  cos, sin, positions, self._mamba_layer, group=tail)
+        return x
+
+    # -- encoder-decoder -------------------------------------------------------
+
+    def _enc_layer(self, x, w, cos, sin, positions):
+        cfg = self.cfg
+        acfg = dataclasses.replace(self.acfg, causal=False)
+        h = L.rms_norm(x, w["attn_norm"], cfg.norm_eps)
+        a, _ = attn_mod.self_attention(h, w, acfg, cos, sin, positions)
+        x = x + a
+        h = L.rms_norm(x, w["mlp_norm"], cfg.norm_eps)
+        return x + L.swiglu_mlp(h, w["w_gate"], w["w_up"], w["w_down"])
+
+    def _dec_layer_factory(self, memory):
+        cfg = self.cfg
+
+        def f(x, w, cos, sin, positions):
+            h = L.rms_norm(x, w["attn_norm"], cfg.norm_eps)
+            a, _ = attn_mod.self_attention(h, w, self.acfg, cos, sin, positions)
+            x = x + a
+            h = L.rms_norm(x, w["xattn_norm"], cfg.norm_eps)
+            xw = {"wq": w["xwq"], "wk": w["xwk"], "wv": w["xwv"], "wo": w["xwo"]}
+            x = x + attn_mod.cross_attention(h, memory, xw, self.acfg)
+            h = L.rms_norm(x, w["mlp_norm"], cfg.norm_eps)
+            return x + L.swiglu_mlp(h, w["w_gate"], w["w_up"], w["w_down"])
+
+        return f
+
+    def _loss_encdec(self, params, batch, key):
+        cfg = self.cfg
+        audio = batch["audio_embeds"].astype(self.compute_dtype)  # (B, S_enc, d)
+        tokens = batch["tokens"]  # (B, S_dec)
+        b, s_dec = tokens.shape
+        s_enc = audio.shape[1]
+        cos_e, sin_e = L.rope_cos_sin(jnp.arange(s_enc), cfg.head_dim, cfg.rope_theta)
+        mem = self._scan_layers(params, "enc", audio, key, cos_e, sin_e,
+                                jnp.arange(s_enc), self._enc_layer)
+        efn = self.engine.gather("enc_final_norm", params["enc_final_norm"], key)
+        mem = L.rms_norm(mem, efn, cfg.norm_eps)
+
+        emb = self.engine.gather("embed", params["embed"], key)
+        x = L.embed_vocab_parallel(tokens, emb)
+        cos_d, sin_d = L.rope_cos_sin(jnp.arange(s_dec), cfg.head_dim, cfg.rope_theta)
+        x = self._scan_layers(params, "dec", x, key, cos_d, sin_d,
+                              jnp.arange(s_dec), self._dec_layer_factory(mem))
+        fn = self.engine.gather("final_norm", params["final_norm"], key)
+        x = L.rms_norm(x, fn, cfg.norm_eps)
+        head = emb if cfg.tie_embeddings else self.engine.gather("lm_head", params["lm_head"], key)
+        return L.vocab_parallel_xent(x.reshape(b * s_dec, -1), head,
+                                     batch["labels"].reshape(b * s_dec))

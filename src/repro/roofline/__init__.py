@@ -1,0 +1,7 @@
+from .analysis import (  # noqa: F401
+    HW_V5E,
+    Hardware,
+    RooflineReport,
+    collective_bytes_from_hlo,
+    roofline,
+)

@@ -1,0 +1,79 @@
+"""Batched serving engine: jit-compiled prefill + decode steps over the mesh.
+
+The engine owns the shard_map plumbing; `DecodeModel` owns the per-device
+math.  Decoding re-gathers quantized weights layer-by-layer every step —
+FSDP-style serving — so step latency is collective-bound and QSDP's wire
+compression directly reduces it (see benchmarks/fig4_bandwidth_model.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.decode import DecodeModel, DecodeSpec, make_decode_spec
+from ..models.transformer import Model
+
+
+class ServeEngine:
+    def __init__(self, model: Model, mesh, spec: DecodeSpec):
+        self.model = model
+        self.mesh = mesh
+        self.spec = spec
+        self.dm = DecodeModel(model, spec)
+        ms = model.ms
+        self.bax = ms.fsdp_axes if spec.batch_sharded else None
+        self._pspecs = model.param_pspecs()
+        _, self.cache_pspecs = self.dm.cache_struct()
+        self._decode = None
+        self._prefill = None
+
+    # -- jitted steps ---------------------------------------------------------
+
+    def decode_step(self):
+        if self._decode is None:
+            fn = jax.shard_map(
+                self.dm.decode_fn, mesh=self.mesh,
+                in_specs=(self._pspecs, self.cache_pspecs, P(self.bax), P(), P()),
+                out_specs=(P(self.bax), self.cache_pspecs),
+                check_vma=False,
+            )
+            self._decode = jax.jit(fn, donate_argnums=(1,))
+        return self._decode
+
+    def prefill_step(self, batch_pspecs: dict):
+        if self._prefill is None:
+            fn = jax.shard_map(
+                self.dm.prefill_fn, mesh=self.mesh,
+                in_specs=(self._pspecs, batch_pspecs, P()),
+                out_specs=(P(self.bax), self.cache_pspecs),
+                check_vma=False,
+            )
+            self._prefill = jax.jit(fn)
+        return self._prefill
+
+    # -- convenience ------------------------------------------------------------
+
+    def init_cache(self):
+        structs, specs = self.dm.cache_struct()
+        return {
+            k: jax.device_put(jnp.zeros(s.shape, s.dtype), NamedSharding(self.mesh, specs[k]))
+            for k, s in structs.items()
+        }
+
+    def generate(self, params, prompt_batch: dict, batch_pspecs: dict,
+                 n_tokens: int, key: Optional[jax.Array] = None):
+        """Greedy generation: prefill the prompt then decode n_tokens."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        s = prompt_batch["tokens"].shape[1]
+        nxt, cache = self.prefill_step(batch_pspecs)(params, prompt_batch, key)
+        out = [nxt]
+        dec = self.decode_step()
+        for i in range(n_tokens - 1):
+            pos = jnp.asarray(s + i, jnp.int32)
+            nxt, cache = dec(params, cache, nxt, pos, jax.random.fold_in(key, i))
+            out.append(nxt)
+        return jnp.stack(out, axis=1)  # (B, n_tokens)

@@ -1,0 +1,2 @@
+from .step import TrainState, build_train_step  # noqa: F401
+from .checkpoint import load_checkpoint, save_checkpoint  # noqa: F401

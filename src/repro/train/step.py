@@ -1,0 +1,155 @@
+"""Train-step builder: gradient accumulation + QSDP-wired backward +
+sharded optimizer update, all inside one shard_map.
+
+Schedule per optimizer step (paper Figure 5 + Appendix A):
+
+  for each of n_micro microbatches:             (scan, rematerialized)
+      for each layer:  quantized AllGather(w)   -> forward
+      for each layer:  quantized AllGather(w)   -> backward
+                       quantized ReduceScatter(g)
+  grads averaged over microbatches              (local, sharded)
+  AdamW update on the f32 master shards         (local, sharded)
+  [optional] Q^w re-quantization of the master  (theory-faithful mode)
+
+Gradient semantics: `Model.loss_fn` returns the per-device local-batch mean
+with no collectives on the loss path; the engine's reduce-scatter backward
+divides by the FSDP size, so accumulated grads are exact global-batch means.
+Global-norm clipping needs one extra psum over all mesh axes (each element
+of the sharded param grid lives on exactly one device).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core.quant import QuantConfig, quantize_dequantize
+from ..models.transformer import Model
+from ..optim import Optimizer, OptState
+
+
+class TrainState(NamedTuple):
+    params: dict[str, jax.Array]
+    opt: OptState
+
+
+def init_train_state(model: Model, optimizer: Optimizer, key: jax.Array) -> TrainState:
+    params = model.init_params(key)
+    return TrainState(params=params, opt=optimizer.init(params))
+
+
+def state_pspecs(model: Model, optimizer_has_mu: bool = True, has_nu: bool = True):
+    pspec = model.param_pspecs()
+    mu = pspec if optimizer_has_mu else ()
+    nu = pspec if has_nu else ()
+    return TrainState(
+        params=pspec,
+        opt=OptState(step=P(), mu=mu, nu=nu),
+    )
+
+
+def build_train_step(
+    model: Model,
+    optimizer: Optimizer,
+    n_micro: int = 1,
+    grad_clip: float = 1.0,
+    quantize_master: bool = False,
+    master_bits: int = 8,
+    donate: bool = True,
+):
+    """Returns (step_fn, in_specs, out_specs).  step_fn is per-device code
+    to be wrapped in shard_map by the caller (launch.train / dryrun)."""
+    ms = model.ms
+    all_axes = tuple(ms.axes)
+
+    def step_fn(state: TrainState, batch: dict, key: jax.Array) -> tuple[TrainState, dict]:
+        params = state.params
+
+        # ---- microbatch split along the batch axis of every batch leaf ----
+        # (axis 0 for everything except the M-RoPE "positions" stream, whose
+        # leading axis is the 3 temporal/height/width channels)
+        def split(name, x):
+            ax = 1 if name == "positions" else 0
+            b = x.shape[ax]
+            assert b % n_micro == 0, (name, b, n_micro)
+            x = jnp.moveaxis(x, ax, 0)
+            x = x.reshape(n_micro, b // n_micro, *x.shape[1:])
+            return jnp.moveaxis(x, 1, ax + 1)
+
+        micro = {k: split(k, v) for k, v in batch.items()}
+
+        def micro_step(carry, inp):
+            acc, i = carry
+            mb = inp
+            mkey = jax.random.fold_in(key, i)
+            loss, grads = jax.value_and_grad(model.loss_fn)(params, mb, mkey)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            return (acc, i + 1), loss
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, _), losses = lax.scan(micro_step, (zero, jnp.zeros((), jnp.int32)), micro)
+        grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        loss = jnp.mean(losses)
+
+        # ---- global-norm clip (elements are disjoint across the mesh) ----
+        if grad_clip:
+            sq = sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads))
+            gnorm = jnp.sqrt(lax.psum(sq, all_axes))
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+        else:
+            sq = sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads))
+            gnorm = jnp.sqrt(lax.psum(sq, all_axes))
+            scale = jnp.ones(())
+
+        new_params, new_opt = optimizer.update(params, grads, state.opt, grad_scale=scale)
+
+        # ---- optional theory-faithful master quantization (Theorem 2) ----
+        if quantize_master:
+            qc = QuantConfig(bits=master_bits, bucket_size=model.qcfg.bucket_size, mode="shift")
+            mkey = jax.random.fold_in(key, 0x3A57E9)
+
+            def qmaster(name, p):
+                spec = model.specs[name]
+                if not spec.quantize or spec.n_logical_local(ms.model_size) < model.qcfg.min_quant_size:
+                    return p
+                return quantize_dequantize(p, qc, jax.random.fold_in(mkey, _h(name))).astype(p.dtype)
+
+            new_params = {k: qmaster(k, v) for k, v in new_params.items()}
+
+        metrics = {
+            "loss": lax.pmean(loss, all_axes),
+            "grad_norm": gnorm,
+            "step": new_opt.step,
+        }
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return step_fn
+
+
+def _h(s: str) -> int:
+    h = 2166136261
+    for ch in s.encode():
+        h = (h ^ ch) * 16777619 & 0xFFFFFFFF
+    return h
+
+
+def make_jitted_train_step(model: Model, optimizer: Optimizer, mesh, n_micro: int = 1,
+                           batch_pspec: Optional[dict] = None, donate: bool = True,
+                           **kw):
+    """Convenience: shard_map + jit the per-device step over `mesh`."""
+    step = build_train_step(model, optimizer, n_micro=n_micro, **kw)
+    sspec = state_pspecs(model)
+    if batch_pspec is None:
+        batch_pspec = {"tokens": P(model.ms.fsdp_axes), "labels": P(model.ms.fsdp_axes)}
+    mapped = jax.shard_map(
+        step, mesh=mesh,
+        in_specs=(sspec, batch_pspec, P()),
+        out_specs=(sspec, {"loss": P(), "grad_norm": P(), "step": P()}),
+        check_vma=False,
+    )
+    return jax.jit(mapped, donate_argnums=(0,) if donate else ())

@@ -1,0 +1,19 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — unit/smoke tests
+run on the real single CPU device; distributed behaviour is covered by
+subprocess tests (test_distributed.py) that set their own device count,
+and by the dry-run (launch/dryrun.py) which forces 512 in-process.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def mesh11():
+    """Trivial (data=1, model=1) mesh — exercises the full shard_map code
+    path (collectives degenerate to identity) on one device."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,35 @@
+"""Checkpoint save/load roundtrip on the trivial mesh."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core.qsdp import MeshSpec, QSDPConfig
+from repro.models.transformer import Model
+from repro.optim import AdamWConfig, make_adamw
+from repro.train import load_checkpoint, save_checkpoint
+from repro.train.step import init_train_state, state_pspecs
+
+
+def test_checkpoint_roundtrip(tmp_path, mesh11):
+    cfg = configs.get_smoke("gpt_125m")
+    ms = MeshSpec(axes=("data", "model"), shape=(1, 1))
+    model = Model(cfg, ms, QSDPConfig(min_quant_size=256))
+    opt = make_adamw(AdamWConfig())
+    state = init_train_state(model, opt, jax.random.PRNGKey(0))
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, state, meta={"arch": cfg.name})
+    loaded = load_checkpoint(path, mesh11, state_pspecs(model))
+    for k in state.params:
+        np.testing.assert_array_equal(np.asarray(state.params[k]),
+                                      np.asarray(loaded.params[k]))
+    for k in state.opt.mu:
+        np.testing.assert_array_equal(np.asarray(state.opt.mu[k]),
+                                      np.asarray(loaded.opt.mu[k]))
+    assert int(loaded.opt.step) == int(state.opt.step)
+
+    import json, os
+    with open(os.path.join(path, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["meta"]["arch"] == cfg.name
+    assert man["format"].startswith("qsdp-ckpt")

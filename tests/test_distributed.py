@@ -1,0 +1,35 @@
+"""Multi-device integration tests.
+
+jax's device count is fixed at first init, so in-process tests here would
+see this process's single CPU device; the real distributed coverage runs in
+subprocesses with XLA_FLAGS=--xla_force_host_platform_device_count=8:
+
+  * scripts/check_distributed.py — numerical correctness of the quantized
+    collectives, hierarchical variants, engine gathers, TP gradients vs a
+    single-device replica, and decode==prefill consistency.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)  # script sets its own device count
+    return subprocess.run(
+        [sys.executable, os.path.join(ROOT, "scripts", script)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+
+
+@pytest.mark.slow
+def test_distributed_numerics():
+    r = _run("check_distributed.py")
+    assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-4000:]
+    assert "ALL-OK" in r.stdout
+    assert "FAIL " not in r.stdout

@@ -1,0 +1,88 @@
+"""All 40 (architecture x input shape) pairs produce coherent input specs
+and parameter layouts for the production meshes — pure shape math, no
+devices (the compile proof lives in the dry-run sweep)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.inputs import input_specs
+from repro.core.qsdp import MeshSpec, QSDPConfig
+from repro.models.config import SHAPES
+from repro.models.decode import make_decode_spec
+from repro.models.transformer import Model
+
+MS = MeshSpec(axes=("data", "model"), shape=(16, 16))
+MS_POD = MeshSpec(axes=("pod", "data", "model"), shape=(2, 16, 16))
+
+
+@pytest.fixture(scope="module")
+def models():
+    return {a: Model(configs.get_config(a), MS, QSDPConfig())
+            for a in configs.ASSIGNED}
+
+
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_input_specs_all_archs(models, shape_name):
+    shape = SHAPES[shape_name]
+    for arch, model in models.items():
+        kind, structs, specs = input_specs(model, shape)
+        assert kind == {"train": "train", "prefill": "prefill",
+                        "decode": "decode"}[shape.kind]
+        flat_structs = jax.tree.leaves(structs)
+        flat_specs = jax.tree.leaves(specs, is_leaf=lambda x: x is None or hasattr(x, "index"))
+        assert all(isinstance(s, jax.ShapeDtypeStruct) for s in flat_structs)
+        if kind == "train":
+            batch, _ = structs
+            assert batch["tokens"].shape == (shape.global_batch, shape.seq_len)
+        elif kind == "decode":
+            cache, tok, pos, _ = structs
+            assert tok.shape == (shape.global_batch,)
+            # seq-sharded cache dims divide the model axis
+            for k, st in cache.items():
+                if k in ("k", "v", "shared_k", "shared_v", "ck", "cv"):
+                    assert st.shape[2] % 16 == 0, (arch, k, st.shape)
+
+
+def test_param_layouts_production_mesh(models):
+    """Every parameter's rest layout divides both meshes exactly."""
+    for arch, model in models.items():
+        for name, spec in model.specs.items():
+            shp = spec.rest_shape(MS)
+            assert shp[-2] == MS.fsdp_size, (arch, name)
+            # TP divisibility was already asserted in tp_local_shape
+            spec.tp_local_shape(MS.model_size)
+            shp_pod = spec.rest_shape(MS_POD)
+            assert shp_pod[-2] == MS_POD.fsdp_size, (arch, name)
+
+
+def test_decode_spec_policies(models):
+    # dense archs use the sliding window for long_500k
+    d = make_decode_spec(models["yi_34b"], SHAPES["long_500k"])
+    assert d.cache_len == configs.get_config("yi_34b").long_context_window
+    # ssm is O(1)-state
+    d = make_decode_spec(models["mamba2_370m"], SHAPES["long_500k"])
+    assert d.cache_len == 0
+    # decode_32k keeps the full ring
+    d = make_decode_spec(models["yi_34b"], SHAPES["decode_32k"])
+    assert d.cache_len == 32_768 and d.batch_sharded
+    # long_500k batch=1 cannot shard over 16 data ranks
+    d = make_decode_spec(models["qwen2_vl_72b"], SHAPES["long_500k"])
+    assert not d.batch_sharded
+
+
+def test_model_flops_accounting(models):
+    """6ND sanity: the headline parameter counts match the model cards."""
+    expect = {
+        "qwen2_5_3b": (2.5e9, 4.0e9), "yi_6b": (5.5e9, 7.0e9),
+        "yi_34b": (32e9, 37e9), "qwen2_vl_72b": (68e9, 75e9),
+        "mamba2_370m": (0.3e9, 0.5e9), "olmoe_1b_7b": (6.0e9, 8.0e9),
+        "qwen3_moe_235b_a22b": (200e9, 260e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = configs.get_config(arch).n_params()
+        assert lo <= n <= hi, (arch, n / 1e9)
+    # MoE active < total
+    c = configs.get_config("qwen3_moe_235b_a22b")
+    assert c.n_active_params() < 0.2 * c.n_params()

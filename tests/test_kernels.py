@@ -1,0 +1,106 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU): shape/dtype
+sweeps + property tests, per the kernel contract in kernels/EXAMPLE.md."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("nb", [1, 7, 8, 17])
+@pytest.mark.parametrize("bucket", [256, 1024])
+@pytest.mark.parametrize("stochastic", [True, False])
+def test_quantize_kernel_matches_ref(nb, bucket, stochastic):
+    x = jax.random.normal(KEY, (nb, bucket)) * 2.0
+    rand = jax.random.uniform(jax.random.PRNGKey(1), x.shape)
+    c, s, z = ops.quantize_buckets(x, rand, 255, stochastic)
+    c2, s2, z2 = ref.quantize_ref(x, rand, 255, stochastic)
+    # codes: exact up to 1-ULP reduction-order ties at rounding boundaries
+    # (kernel reduces min/max over an (8, bucket) VMEM tile; XLA's tree
+    # differs) — require <=1 level difference and >=99.9% exact.
+    ca, cb = np.asarray(c, np.int32), np.asarray(c2, np.int32)
+    assert np.max(np.abs(ca - cb)) <= 1
+    assert np.mean(ca == cb) >= 0.999
+    np.testing.assert_allclose(s, s2, rtol=1e-6)
+    np.testing.assert_allclose(z, z2, rtol=1e-6)
+
+
+@pytest.mark.parametrize("levels", [3, 15, 63, 255])
+def test_quantize_kernel_levels_sweep(levels):
+    x = jax.random.normal(KEY, (4, 512))
+    rand = jax.random.uniform(jax.random.PRNGKey(2), x.shape)
+    c, s, z = ops.quantize_buckets(x, rand, levels, True)
+    c2, s2, z2 = ref.quantize_ref(x, rand, levels, True)
+    ca, cb = np.asarray(c, np.int32), np.asarray(c2, np.int32)
+    assert np.max(np.abs(ca - cb)) <= 1 and np.mean(ca == cb) >= 0.999
+    assert int(jnp.max(c)) <= levels
+
+
+@pytest.mark.parametrize("nb", [1, 5, 16])
+def test_dequantize_kernel_matches_ref(nb):
+    codes = jax.random.randint(KEY, (nb, 512), 0, 256).astype(jnp.uint8)
+    scale = jax.random.uniform(jax.random.PRNGKey(3), (nb, 1)) + 0.01
+    zero = jax.random.normal(jax.random.PRNGKey(4), (nb, 1))
+    out = ops.dequantize_buckets(codes, scale, zero)
+    np.testing.assert_allclose(out, ref.dequantize_ref(codes, scale, zero),
+                               rtol=1e-5, atol=1e-6)  # fma reassociation
+
+
+def test_quant_dequant_kernel_roundtrip():
+    x = jax.random.normal(KEY, (8, 1024))
+    rand = jax.random.uniform(jax.random.PRNGKey(5), x.shape)
+    c, s, z = ops.quantize_buckets(x, rand, 255, False)
+    y = ops.dequantize_buckets(c, s, z)
+    assert float(jnp.max(jnp.abs(y - x))) <= 0.5 * float(jnp.max(s)) + 1e-6
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 64, 32), (64, 256, 192), (128, 512, 256),
+                                   (33, 100, 77)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rowquant_matmul_shape_dtype_sweep(m, k, n, dtype):
+    w = jax.random.normal(KEY, (k, n))
+    codes, scale, zero = ref.quantize_rowwise_ref(w, 255)
+    x = jax.random.normal(jax.random.PRNGKey(6), (m, k)).astype(dtype)
+    y = ops.rowquant_matmul(x, codes, scale, zero)
+    y_ref = ref.rowquant_matmul_ref(x, codes, scale, zero)
+    assert y.dtype == dtype
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=tol, atol=tol * k)
+
+
+@pytest.mark.parametrize("blocks", [(32, 64, 64), (128, 256, 512)])
+def test_rowquant_matmul_block_shapes(blocks):
+    bm, bn, bk = blocks
+    w = jax.random.normal(KEY, (512, 256))
+    codes, scale, zero = ref.quantize_rowwise_ref(w, 255)
+    x = jax.random.normal(jax.random.PRNGKey(7), (64, 512))
+    y = ops.rowquant_matmul(x, codes, scale, zero, block_m=bm, block_n=bn, block_k=bk)
+    y_ref = ref.rowquant_matmul_ref(x, codes, scale, zero)
+    np.testing.assert_allclose(y, y_ref, rtol=2e-4, atol=1e-2)
+
+
+@given(m=st.integers(1, 40), k=st.integers(8, 128), n=st.integers(1, 48))
+@settings(max_examples=15, deadline=None)
+def test_rowquant_matmul_property_any_shape(m, k, n):
+    w = jax.random.normal(jax.random.PRNGKey(k), (k, n))
+    codes, scale, zero = ref.quantize_rowwise_ref(w, 255)
+    x = jax.random.normal(jax.random.PRNGKey(m), (m, k))
+    y = ops.rowquant_matmul(x, codes, scale, zero, block_m=32, block_n=32, block_k=64)
+    np.testing.assert_allclose(y, ref.rowquant_matmul_ref(x, codes, scale, zero),
+                               rtol=1e-3, atol=1e-2)
+
+
+def test_rowquant_matmul_is_close_to_unquantized():
+    """The fused kernel on 8-bit codes approximates the f32 matmul."""
+    w = jax.random.normal(KEY, (256, 128)) * 0.05
+    x = jax.random.normal(jax.random.PRNGKey(8), (32, 256))
+    codes, scale, zero = ops.quantize_weight_rowwise(w, bits=8)
+    y = ops.rowquant_matmul(x, codes, scale, zero)
+    rel = float(jnp.linalg.norm(y - x @ w) / jnp.linalg.norm(x @ w))
+    assert rel < 2e-2, rel

@@ -1,0 +1,159 @@
+"""Unit + property tests for the paper's quantizers (core/quant.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (
+    QuantConfig, Quantized, dequantize, pack_codes, q_coinflip, q_nearest,
+    q_shift, quantize, quantize_dequantize, quantized_shapes, unpack_codes,
+    wire_bytes,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Lattice quantizers (Definitions 1 and 12, Lemma 5 / Lemma 15)
+# ---------------------------------------------------------------------------
+
+
+def test_q_nearest_grid():
+    x = jnp.array([0.2, -0.7, 1.49, 2.51])
+    y = q_nearest(x, 1.0)
+    np.testing.assert_allclose(y, [0.0, -1.0, 1.0, 3.0])
+
+
+def test_q_shift_unbiased_dithered_variance():
+    """Definition 1 (shift r re-added at decode) is unbiased with the classic
+    dithered-quantization error law: err ~ Unif(-d/2, d/2], var = d^2/12 for
+    EVERY x.  (The paper's Lemma-5 variance formula d^2 {x/d}(1-{x/d})
+    describes the variant that does NOT re-add r — its proof drops the '+r'
+    term of Definition 1.  Both variants are unbiased and both satisfy the
+    Lemma 4 contraction, which test_theory checks on the actual operator.)"""
+    delta = 0.25
+    x = jnp.array([0.1, 0.33, -0.6, 1.01])
+    keys = jax.random.split(KEY, 20000)
+    ys = jax.vmap(lambda k: q_shift(x, delta, k))(keys)
+    mean = jnp.mean(ys, axis=0)
+    var = jnp.mean((ys - x) ** 2, axis=0)
+    np.testing.assert_allclose(mean, x, atol=3e-3)
+    np.testing.assert_allclose(var, jnp.full(4, delta**2 / 12), rtol=0.08)
+
+
+def test_q_shift_shared_shift_dependence():
+    """Definition 1: ONE shift for all coordinates -> outputs lie on a
+    common shifted lattice (pairwise differences are multiples of delta)."""
+    delta = 0.5
+    x = jax.random.normal(KEY, (64,))
+    y = q_shift(x, delta, jax.random.PRNGKey(3))
+    d = (y - y[0]) / delta
+    np.testing.assert_allclose(d, jnp.round(d), atol=1e-5)
+
+
+def test_q_coinflip_unbiased():
+    delta = 0.3
+    x = jnp.array([0.07, -0.22, 0.9])
+    keys = jax.random.split(KEY, 20000)
+    ys = jax.vmap(lambda k: q_coinflip(x, delta, k))(keys)
+    np.testing.assert_allclose(jnp.mean(ys, axis=0), x, atol=4e-3)
+    # every sample is on the un-shifted lattice
+    np.testing.assert_allclose(ys / delta, jnp.round(ys / delta), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Bit packing
+# ---------------------------------------------------------------------------
+
+
+@given(bits=st.sampled_from([1, 2, 4, 8]), n=st.integers(1, 64))
+@settings(max_examples=30, deadline=None)
+def test_pack_unpack_roundtrip(bits, n):
+    k = 8 // bits
+    codes = np.random.default_rng(n).integers(0, 1 << bits, size=(3, n * k)).astype(np.uint8)
+    packed = pack_codes(jnp.asarray(codes), bits)
+    assert packed.shape == (3, n)
+    out = unpack_codes(packed, bits)
+    np.testing.assert_array_equal(np.asarray(out), codes)
+
+
+def test_pack_passthrough_odd_bits():
+    codes = jnp.arange(8, dtype=jnp.uint8)[None]
+    for bits in (3, 5, 6, 7):
+        assert pack_codes(codes, bits) is codes
+
+
+# ---------------------------------------------------------------------------
+# Wire quantizer (Section 5: bucketed min-max)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["shift", "stochastic", "nearest"])
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_wire_roundtrip_error_bound(mode, bits):
+    cfg = QuantConfig(bits=bits, bucket_size=256, mode=mode)
+    x = jax.random.normal(KEY, (1000,)) * 3.0
+    xq = quantize_dequantize(x, cfg, jax.random.PRNGKey(1))
+    # per-bucket scale = (max-min)/levels; error <= scale for stochastic,
+    # <= scale/2 + shift for the others -> bound by 1.5 * max scale
+    q = quantize(x, cfg, jax.random.PRNGKey(1))
+    bound = 1.5 * float(jnp.max(q.scale))
+    assert float(jnp.max(jnp.abs(xq - x))) <= bound + 1e-6
+    assert xq.shape == x.shape and xq.dtype == x.dtype
+
+
+def test_wire_nearest_is_optimal_grid():
+    cfg = QuantConfig(bits=8, bucket_size=128, mode="nearest")
+    x = jax.random.normal(KEY, (128,))
+    xq = quantize_dequantize(x, cfg)
+    q = quantize(x, cfg)
+    assert float(jnp.max(jnp.abs(xq - x))) <= 0.5 * float(jnp.max(q.scale)) + 1e-6
+
+
+def test_wire_stochastic_unbiased():
+    cfg = QuantConfig(bits=4, bucket_size=64, mode="stochastic")
+    x = jax.random.normal(KEY, (64,))
+    keys = jax.random.split(KEY, 4000)
+    ys = jax.vmap(lambda k: quantize_dequantize(x, cfg, k))(keys)
+    err = jnp.mean(ys, axis=0) - x
+    scale = float(jnp.max(quantize(x, cfg, KEY).scale))
+    assert float(jnp.max(jnp.abs(err))) < 0.1 * scale
+
+
+def test_bucket_padding_and_shapes():
+    cfg = QuantConfig(bits=8, bucket_size=1024, mode="nearest")
+    x = jax.random.normal(KEY, (3, 700))  # 2100 elements -> 3 buckets padded
+    q = quantize(x, cfg)
+    s = quantized_shapes(x.size, cfg)
+    assert q.codes.shape == s["codes"] == (3, 1024)
+    assert q.scale.shape == s["scale"] == (3,)
+    assert dequantize(q).shape == x.shape
+    np.testing.assert_allclose(dequantize(q), x, atol=float(jnp.max(q.scale)))
+
+
+def test_wire_bytes_accounting():
+    cfg = QuantConfig(bits=8, bucket_size=1024)
+    # n=4096 -> 4 buckets: 4096 code bytes + 4*(4+4) scale/zero bytes
+    assert wire_bytes(4096, cfg) == 4096 + 32
+    cfg4 = QuantConfig(bits=4, bucket_size=1024)
+    assert wire_bytes(4096, cfg4) == 2048 + 32
+
+
+@given(n=st.integers(1, 5000), bits=st.sampled_from([2, 4, 8]))
+@settings(max_examples=25, deadline=None)
+def test_quantize_any_size_roundtrips(n, bits):
+    cfg = QuantConfig(bits=bits, bucket_size=512, mode="nearest")
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,))
+    q = quantize(x, cfg)
+    y = dequantize(q)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(jnp.max(jnp.abs(y - x))) <= 0.51 * float(jnp.max(q.scale)) + 1e-6
+
+
+def test_constant_bucket_zero_scale():
+    cfg = QuantConfig(bits=8, bucket_size=64, mode="nearest")
+    x = jnp.full((64,), 3.14159)
+    y = quantize_dequantize(x, cfg)
+    np.testing.assert_allclose(y, x, atol=1e-5)

@@ -1,0 +1,87 @@
+"""HLO analyzer + roofline term tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline import HW_V5E, collective_bytes_from_hlo, roofline
+from repro.roofline.hlo_analyzer import analyze_hlo
+
+SYNTH = """
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %g0 = s32[] get-tuple-element(%p), index=0
+  %g1 = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %ag = f32[8,8]{1,0} all-gather(%g1), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}
+  %d = f32[8,8]{1,0} dot(%ag, %g1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%g0, %d)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  ROOT %c = pred[] constant(true)
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %ar = f32[8,8]{1,0} all-reduce(%a), replica_groups={{0,1}}, to_apply=%cond
+  %t0 = (s32[], f32[8,8]{1,0}) tuple(%ar, %a)
+  %w = (s32[], f32[8,8]{1,0}) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %r = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_analyzer_trip_count_multiplication():
+    r = analyze_hlo(SYNTH)
+    # dot: 2*8*8*8 flops, x10 trips
+    assert r["flops"] == 10 * 2 * 8 * 8 * 8
+    c = r["collectives"]
+    # all-gather in body: result 256B, g=4 -> 192B wire, x10
+    assert c["all-gather"] == 10 * (256 * 3 // 4)
+    # top-level all-reduce: 2*256*(2-1)/2 = 256
+    assert c["all-reduce"] == 256
+    assert c["counts"]["all-gather"] == 10
+
+
+def test_collective_bytes_public_api():
+    c = collective_bytes_from_hlo(SYNTH)
+    assert c["total"] == c["all-gather"] + c["all-reduce"]
+
+
+def test_analyzer_against_real_lowering():
+    """Known matmul chain: scan(5) of 64x64 matmuls = 5*2*64^3 flops."""
+    a = jnp.zeros((64, 64), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            return c @ x, None
+        y, _ = jax.lax.scan(body, x, None, length=5)
+        return y
+
+    txt = jax.jit(f).lower(a).compile().as_text()
+    r = analyze_hlo(txt)
+    assert r["flops"] == 5 * 2 * 64**3
+    assert r["collectives"]["total"] == 0
+    assert r["traffic_bytes"] > 5 * 64 * 64 * 4  # at least the carries
+
+
+def test_roofline_terms_and_bottleneck():
+    rep = roofline("a", "s", "m", cost={}, hlo_text=SYNTH, n_chips=256,
+                   model_flops_global=256 * 5000.0, hw=HW_V5E)
+    assert rep.t_compute == pytest.approx(10 * 1024 / HW_V5E.peak_flops)
+    assert rep.bottleneck in ("compute", "memory", "collective")
+    assert rep.model_flops == pytest.approx(5000.0)
+    d = rep.to_dict()
+    assert {"t_compute", "t_memory", "t_collective", "bottleneck"} <= set(d)
+
+
+def test_wire_formulas():
+    from repro.roofline.hlo_analyzer import _wire_bytes
+    assert _wire_bytes("all-gather", 1024, 4) == 768
+    assert _wire_bytes("reduce-scatter", 256, 4) == 768
+    assert _wire_bytes("all-reduce", 1024, 4) == 1536
+    assert _wire_bytes("all-to-all", 1024, 4) == 768
+    assert _wire_bytes("collective-permute", 1024, 4) == 1024

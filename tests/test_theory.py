@@ -1,0 +1,132 @@
+"""Theorem 2 / Corollary 3 / Lemma 4-5 validation (core/theory.py).
+
+These are the paper's own claims, checked against its own parameter
+choices on well-conditioned quadratic PL objectives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quant import q_coinflip, q_nearest, q_shift
+from repro.core.theory import (
+    Quadratic, make_quadratic, run_qsgd, theorem2_params,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(kappa=4.0, n=64, delta_star=0.5, eps=1e-3, sigma=0.0):
+    obj = make_quadratic(KEY, n=n, kappa=kappa)
+    params = theorem2_params(obj.alpha, obj.beta, delta_star, eps, sigma,
+                             f0_gap=float(obj.f(jnp.zeros(n))))
+    bench = obj.lattice_opt_value(delta_star, jax.random.PRNGKey(7))
+    return obj, params, bench
+
+
+def test_theorem2_deterministic_convergence():
+    """Exact gradients: E f(x_T) <= E f(x*_{r,d*}) + eps (Theorem 2)."""
+    obj, params, bench = _setup()
+    # average over quantization randomness
+    finals = []
+    for s in range(8):
+        xT, _ = run_qsgd(obj, jnp.zeros(64), params, jax.random.PRNGKey(s))
+        finals.append(float(obj.f(xT)))
+    assert np.mean(finals) <= bench + 1e-3 + 1e-6, (np.mean(finals), bench)
+
+
+def test_theorem2_stochastic_convergence():
+    obj, params, bench = _setup(sigma=0.5, eps=0.05)
+    finals = []
+    for s in range(8):
+        xT, _ = run_qsgd(obj, jnp.zeros(64), params, jax.random.PRNGKey(s), sigma=0.5)
+        finals.append(float(obj.f(xT)))
+    assert np.mean(finals) <= bench + 0.05 + 1e-6
+
+
+def test_theorem2_linear_contraction_rate():
+    """Error contracts at least as fast as (1 - eta*alpha/(2 beta)) per step
+    in the deterministic case (Lemma 9/10)."""
+    obj, params, bench = _setup()
+    _, fs = run_qsgd(obj, jnp.zeros(64), params, jax.random.PRNGKey(1))
+    gaps = np.maximum(np.asarray(fs) - bench, 1e-12)
+    # only the transient matters: once the gap hits the quantization floor
+    # the ratio is ~1 by construction.  Use steps with gap > 100x the floor.
+    floor = max(gaps[-1], 1e-9)
+    live = np.nonzero(gaps > 100 * floor)[0]
+    assert len(live) >= 3, (gaps[:5], floor)
+    idx = live[: max(3, len(live) // 2)]
+    ratios = gaps[idx[1:]] / gaps[idx[:-1]]
+    rate = 1.0 - 0.5 * params.eta * obj.alpha / obj.beta
+    assert np.median(ratios) <= rate + 0.05
+
+
+def test_naive_rtn_breaks_convergence():
+    """The paper's motivating failure: round-to-nearest (no random shift)
+    stalls far above the lattice optimum when the step is small relative to
+    the grid (Section 6: 'straightforward round-to-nearest ... does not
+    converge')."""
+    obj, params, bench = _setup()
+    import dataclasses
+    # coarse grid + RTN: iterates freeze as soon as steps < delta/2
+    coarse = dataclasses.replace(params, delta=0.5)
+    x_rtn, _ = run_qsgd(obj, jnp.zeros(64), coarse, KEY, weight_q="nearest")
+    x_shift_runs = [run_qsgd(obj, jnp.zeros(64), coarse, jax.random.PRNGKey(s),
+                             weight_q="shift")[0] for s in range(6)]
+    f_rtn = float(obj.f(x_rtn))
+    f_shift = np.mean([float(obj.f(x)) for x in x_shift_runs])
+    assert f_shift < f_rtn, (f_shift, f_rtn)
+
+
+def test_corollary3_gradient_quantization():
+    """Adding an unbiased gradient quantizer preserves convergence
+    (Corollary 3) with the adjusted eta."""
+    obj = make_quadratic(KEY, n=64, kappa=4.0)
+    delta_star, eps = 0.5, 0.05
+    g_delta = 0.05
+    # sigma_grad^2 <= delta_g * G_l1 (paper bound); use observed G_l1 at x0
+    g_l1 = float(jnp.sum(jnp.abs(obj.grad(jnp.zeros(64)))))
+    sigma_q = np.sqrt(g_delta * g_l1)
+    params = theorem2_params(obj.alpha, obj.beta, delta_star, eps, 0.0,
+                             f0_gap=float(obj.f(jnp.zeros(64))), sigma_q=sigma_q)
+    bench = obj.lattice_opt_value(delta_star, jax.random.PRNGKey(7))
+    finals = [float(obj.f(run_qsgd(obj, jnp.zeros(64), params,
+                                   jax.random.PRNGKey(s), grad_q_delta=g_delta)[0]))
+              for s in range(8)]
+    assert np.mean(finals) <= bench + eps + 1e-6
+
+
+def test_lemma4_variance_contraction():
+    """E||Q_d(x) - x||^2 <= (d/d*) E_r ||x*_{r,d*} - x||^2 with the RHS over
+    nearest lattice points (Lemma 4), checked by Monte Carlo."""
+    delta_star = 1.0
+    delta = delta_star / 8
+    x = jax.random.normal(KEY, (128,)) * 2.3
+    keys = jax.random.split(KEY, 4000)
+    lhs = jnp.mean(jax.vmap(
+        lambda k: jnp.sum((q_shift(x, delta, k) - x) ** 2))(keys))
+    rs = jax.random.uniform(jax.random.PRNGKey(5), (4000,), minval=-0.5, maxval=0.5)
+
+    def nearest_on(r):
+        y = delta_star * jnp.round((x - r * delta_star) / delta_star) + r * delta_star
+        return jnp.sum((y - x) ** 2)
+
+    rhs = jnp.mean(jax.vmap(nearest_on)(rs))
+    assert float(lhs) <= (delta / delta_star) * float(rhs) * 1.05
+
+
+def test_lemma6_scalar_inequality():
+    """(1-{y}){y} <= k (1-{y/k}) {y/k} for integer k."""
+    ys = np.linspace(0, 7, 1401)
+    for k in (2, 3, 8):
+        f = lambda v: (v - np.floor(v))
+        lhs = (1 - f(ys)) * f(ys)
+        rhs = k * (1 - f(ys / k)) * f(ys / k)
+        assert np.all(lhs <= rhs + 1e-9)
+
+
+def test_theorem2_params_formulas():
+    p = theorem2_params(alpha=1.0, beta=2.0, delta_star=1.0, eps=0.1,
+                        sigma=1.0, f0_gap=10.0)
+    assert p.eta == pytest.approx(min(0.3 * 0.1 * 1.0 / 1.0, 1.0))
+    assert p.delta == pytest.approx(p.eta / np.ceil(16 * 4))
+    assert p.lr == pytest.approx(p.eta / 2.0)
