@@ -1,0 +1,132 @@
+"""Kernel micro-benchmarks: jnp reference vs Pallas (interpret / compiled)
+for the QSDP hot-path ops, per (bits, bucket_size).
+
+  PYTHONPATH=src python -m benchmarks.bench_kernels [--n 4194304] \
+      [--bits 2 4 8] [--buckets 512 1024] [--reps 20] [--out results/bench]
+
+For each configuration it times
+
+  * quantize   (fused quantize→pack on the Pallas side),
+  * dequantize (fused unpack→dequantize on the Pallas side),
+  * rowquant_matmul vs dense matmul of the dequantized weight (decode path),
+
+and reports per-op wall ms plus the wire bytes the codes occupy (vs the
+f32 bytes they replace).  On CPU the Pallas numbers are *interpret mode* —
+a correctness path, not a speed path — and are labeled as such; on TPU the
+compiled kernels are benchmarked (and interpret is skipped unless
+--interpret is passed).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QuantConfig, dequantize, quantize, wire_bytes
+from repro.kernels import ops, ref
+
+
+def _timeit(fn, reps: int) -> float:
+    fn()  # compile / warm up
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e3  # ms
+
+
+def bench_quant(n: int, bits: int, bucket: int, mode: str, reps: int,
+                backends: list[str]) -> dict:
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n,))
+    row = dict(op="quant_roundtrip", n=n, bits=bits, bucket=bucket, mode=mode,
+               wire_bytes=wire_bytes(n, QuantConfig(bits=bits, bucket_size=bucket,
+                                                    mode=mode)),
+               f32_bytes=4 * n)
+    for b in backends:
+        cfg = QuantConfig(bits=bits, bucket_size=bucket, mode=mode, backend=b)
+        qfn = jax.jit(lambda x: quantize(x, cfg, jax.random.PRNGKey(1)).codes)
+        q = quantize(x, cfg, jax.random.PRNGKey(1))
+        dfn = jax.jit(lambda q: dequantize(q))
+        row[f"quantize_ms_{b}"] = _timeit(lambda: qfn(x), reps)
+        row[f"dequantize_ms_{b}"] = _timeit(lambda: dfn(q), reps)
+    return row
+
+
+def bench_matmul(m: int, k: int, n: int, reps: int, backends: list[str]) -> dict:
+    w = jax.random.normal(jax.random.PRNGKey(2), (k, n)) * 0.05
+    x = jax.random.normal(jax.random.PRNGKey(3), (m, k))
+    codes, scale, zero = ref.quantize_rowwise_ref(w, 255)
+    row = dict(op="rowquant_matmul", m=m, k=k, n=n,
+               code_bytes=k * n, f32_bytes=4 * k * n)
+    dense = jax.jit(lambda x, w: x @ w)
+    row["dense_matmul_ms"] = _timeit(lambda: dense(x, w), reps)
+    jref = jax.jit(ref.rowquant_matmul_ref)
+    row["rowquant_ms_jnp"] = _timeit(lambda: jref(x, codes, scale, zero), reps)
+    if "pallas" in backends:
+        row["rowquant_ms_pallas"] = _timeit(
+            lambda: ops.rowquant_matmul(x, codes, scale, zero), reps)
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1 << 22)
+    ap.add_argument("--bits", type=int, nargs="+", default=[2, 4, 8])
+    ap.add_argument("--buckets", type=int, nargs="+", default=[512, 1024])
+    ap.add_argument("--modes", type=str, nargs="+", default=["shift", "stochastic"])
+    ap.add_argument("--reps", type=int, default=10)
+    ap.add_argument("--matmul", type=int, nargs=3, default=[256, 2048, 2048],
+                    metavar=("M", "K", "N"))
+    ap.add_argument("--interpret", action="store_true",
+                    help="benchmark the Pallas interpret path even on TPU")
+    ap.add_argument("--skip-pallas", action="store_true")
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args(argv)
+
+    on_tpu = jax.default_backend() == "tpu"
+    pallas_label = "compiled" if on_tpu else "interpret (CPU correctness path)"
+    backends = ["jnp"] + ([] if args.skip_pallas else ["pallas"])
+    print(f"backend={jax.default_backend()}  pallas={pallas_label}")
+
+    rows = []
+    hdr = (f"| {'bits':>4} | {'bucket':>6} | {'mode':>10} | {'wire':>10} "
+           f"| {'q jnp ms':>9} | {'q pallas':>9} | {'dq jnp':>9} | {'dq pallas':>9} |")
+    print(hdr)
+    print("|" + "-" * (len(hdr) - 2) + "|")
+    for bits in args.bits:
+        for bucket in args.buckets:
+            for mode in args.modes:
+                r = bench_quant(args.n, bits, bucket, mode, args.reps, backends)
+                rows.append(r)
+                print(f"| {bits:4d} | {bucket:6d} | {mode:>10} "
+                      f"| {r['wire_bytes']:>10d} "
+                      f"| {r.get('quantize_ms_jnp', 0):9.2f} "
+                      f"| {r.get('quantize_ms_pallas', float('nan')):9.2f} "
+                      f"| {r.get('dequantize_ms_jnp', 0):9.2f} "
+                      f"| {r.get('dequantize_ms_pallas', float('nan')):9.2f} |")
+
+    m, k, n = args.matmul
+    r = bench_matmul(m, k, n, args.reps, backends)
+    rows.append(r)
+    print(f"rowquant_matmul ({m}x{k}x{n}): dense {r['dense_matmul_ms']:.2f}ms, "
+          f"jnp-dequant {r['rowquant_ms_jnp']:.2f}ms, "
+          f"pallas {r.get('rowquant_ms_pallas', float('nan')):.2f}ms "
+          f"(weight bytes {r['code_bytes']:,} vs f32 {r['f32_bytes']:,})")
+
+    if args.out:
+        os.makedirs(args.out, exist_ok=True)
+        path = os.path.join(args.out, "bench_kernels.jsonl")
+        with open(path, "w") as f:
+            for r in rows:
+                f.write(json.dumps(r) + "\n")
+        print(f"wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -18,8 +18,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.core import collectives as coll
 from repro.core.qsdp import (MeshSpec, ParamSpec, QSDPConfig, QSDPEngine,

@@ -3,7 +3,7 @@
 import jax, jax.numpy as jnp
 from functools import partial
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 from repro.core.qsdp import MeshSpec, QSDPConfig
 from repro.models.config import ModelConfig
 from repro.models.transformer import Model

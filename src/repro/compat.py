@@ -1,0 +1,37 @@
+"""Version compatibility shims.
+
+`shard_map` moved twice across jax releases:
+
+  * jax < 0.4.x:    ``jax.experimental.shard_map.shard_map`` with the
+                    replication-check kwarg spelled ``check_rep``;
+  * newer jax:      top-level ``jax.shard_map`` with the kwarg renamed to
+                    ``check_vma``.
+
+Everything in this repo imports :func:`shard_map` from here and uses the
+*new* spelling (``check_vma``); the shim translates for old jax.
+"""
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+if hasattr(jax, "shard_map"):  # jax >= 0.6: the new API, passthrough
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True, **kw):
+        """New-style ``jax.shard_map`` signature on old jax (``check_vma`` is
+        forwarded as ``check_rep``)."""
+        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                          check_rep=check_vma, **kw)
+
+
+if hasattr(lax, "axis_size"):
+    axis_size = lax.axis_size
+else:
+
+    def axis_size(axis_name) -> int:
+        """``lax.axis_size`` for old jax: ``psum(1, axis)`` of a Python int is
+        constant-folded to the static axis size inside shard_map/pmap."""
+        return lax.psum(1, axis_name)

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..compat import axis_size
 from .quant import QuantConfig, Quantized, dequantize, quantize, quantized_shapes
 
 AxisNames = tuple[str, ...]
@@ -41,7 +42,7 @@ AxisNames = tuple[str, ...]
 def _axis_size(axes: AxisNames) -> int:
     s = 1
     for a in axes:
-        s *= lax.axis_size(a)
+        s *= axis_size(a)  # static int (see compat.axis_size)
     return s
 
 
@@ -122,7 +123,7 @@ def all_gather_hierarchical(
     codes = lax.all_gather(codes, inner_axes, tiled=True)
     scale = lax.all_gather(scale, inner_axes, tiled=True)
     zero = lax.all_gather(zero, inner_axes, tiled=True)
-    p = lax.axis_size(pod_axis) * _axis_size(inner_axes)
+    p = axis_size(pod_axis) * _axis_size(inner_axes)
     return _decode_shards(codes, scale, zero, p, x.shape[0], cfg,
                           out_dtype or x.dtype)
 

@@ -44,8 +44,10 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from ..compat import axis_size
+from ..kernels.ops import RowQuantWeight
 from . import collectives as coll
-from .quant import QuantConfig
+from .quant import QuantConfig, quantize
 
 # ---------------------------------------------------------------------------
 # Mesh description
@@ -306,7 +308,7 @@ def _grad_rs_impl(ct: jax.Array, key: jax.Array, st: _GatherStatic) -> jax.Array
     # cotangent here is already identical across model ranks.
     p = 1
     for a in st.fsdp_axes:
-        p *= lax.axis_size(a)
+        p *= axis_size(a)
     if st.gcfg is None:
         g = coll.reduce_scatter_fp(ct, st.fsdp_axes, getattr(jnp, st.grad_wire_dtype))
     elif st.hierarchical and st.pod_axis is not None:
@@ -399,6 +401,60 @@ class QSDPEngine:
     def gather_layer(self, prefix: str, leaves: dict[str, jax.Array], key: jax.Array) -> dict[str, jax.Array]:
         """Gather every parameter of one layer-dict."""
         return {k: self.gather(f"{prefix}{k}", v, key) for k, v in leaves.items()}
+
+    # -- code-form gather (serve/decode; no VJP — inference only) -------------
+
+    def rowquant_eligible(self, name: str) -> bool:
+        """A gathered weight can stay in code form through the matmul iff the
+        wire buckets tile its rows exactly: 2D (K, N) tp-local shape, 8-bit
+        codes (one byte per value on the wire), N a multiple of the bucket
+        size, and an FSDP shard that is a whole number of buckets (no
+        padding anywhere, so global bucket b covers flat elements
+        [b*bsz, (b+1)*bsz) of the row-major weight)."""
+        spec = self.specs[name]
+        if not self._is_quantized(spec) or self.cfg.hierarchical:
+            return False
+        wcfg = self.cfg.wcfg()
+        shape = spec.tp_local_shape(self.ms.model_size)
+        n = spec.n_logical_local(self.ms.model_size)
+        p = self.ms.fsdp_size
+        # NB stacked (scan-over-layers) params are gathered one layer slice
+        # at a time, so `shape`/`n` here are already per-layer quantities.
+        return (
+            wcfg.bits == 8
+            and len(shape) == 2
+            and shape[1] % wcfg.bucket_size == 0
+            and n % p == 0
+            and (n // p) % wcfg.bucket_size == 0
+        )
+
+    def gather_rowquant(self, name: str, local: jax.Array, key: jax.Array):
+        """All-gather parameter `name` but return it as a
+        :class:`RowQuantWeight` — the wire codes reshaped (K, N) with the
+        per-bucket affine as (K, N/bucket) segments — instead of
+        dequantizing to a dense matrix.  ``kernels.ops.rowquant_matmul``
+        then consumes the codes directly, so the full-precision weight is
+        never materialized in HBM (inference only: no custom VJP).
+
+        Falls back to the dense :meth:`gather` when the layout conditions
+        don't hold (see :meth:`rowquant_eligible`)."""
+        if not self.rowquant_eligible(name):
+            return self.gather(name, local, key)
+        spec = self.specs[name]
+        wcfg = self.cfg.wcfg()
+        flat = local.reshape(-1)
+        key = jax.random.fold_in(key, _stable_hash(name))
+        q = quantize(flat, wcfg, key)
+        codes = lax.all_gather(q.codes, self.ms.fsdp_axes, tiled=True)
+        scale = lax.all_gather(q.scale, self.ms.fsdp_axes, tiled=True)
+        zero = lax.all_gather(q.zero, self.ms.fsdp_axes, tiled=True)
+        k_dim, n_dim = spec.tp_local_shape(self.ms.model_size)
+        n_seg = n_dim // wcfg.bucket_size
+        return RowQuantWeight(
+            codes=codes.reshape(k_dim, n_dim),
+            scale=scale.reshape(k_dim, n_seg),
+            zero=zero.reshape(k_dim, n_seg),
+        )
 
     # -- host-side helpers ----------------------------------------------------
 

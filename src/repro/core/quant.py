@@ -17,7 +17,14 @@ Two families live here:
     uint8 — this is exactly what QSDP puts on the wire, so collective byte
     counts in the roofline analysis are faithful.
 
-Everything is pure ``jnp`` and jit/shard_map friendly.
+Everything is jit/shard_map friendly.  The wire quantizers dispatch between
+two bit-exact backends (see :func:`resolve_backend` in ``kernels.ops``):
+
+  * ``"jnp"``    — the pure-jnp reference below (always available);
+  * ``"pallas"`` — the fused quantize→pack / unpack→dequantize TPU kernels
+    in ``kernels.quantize`` (interpret mode off-TPU), selected per call via
+    ``backend=``, per config via ``QuantConfig.backend``, or globally via
+    ``REPRO_QUANT_BACKEND`` / ``REPRO_PALLAS_INTERPRET``.
 """
 from __future__ import annotations
 
@@ -28,6 +35,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from ..kernels import ops as _kops
 
 # ---------------------------------------------------------------------------
 # Lattice quantizers (paper Definitions 1 and 12) — no scaling, no clipping.
@@ -93,11 +102,16 @@ class QuantConfig:
     # stochastic-rounding threshold width: 32 = f32 uniforms (reference),
     # 16 = u16 raw bits compare — 4x less RNG traffic, bias <= 2^-16 (§Perf)
     rand_bits: int = 32
+    # compute backend: "pallas" (fused kernels), "jnp" (reference), or
+    # "auto" (kernels on TPU / under REPRO_PALLAS_INTERPRET, jnp otherwise).
+    # Both backends emit identical wire bytes (tested bit-exact).
+    backend: str = "auto"
 
     def __post_init__(self):
         assert 1 <= self.bits <= 8, self.bits
         assert self.mode in _MODES, self.mode
         assert self.rand_bits in (16, 32), self.rand_bits
+        assert self.backend in ("auto", "jnp", "pallas"), self.backend
 
     @property
     def levels(self) -> int:
@@ -188,21 +202,74 @@ def _to_buckets(x: jax.Array, bucket_size: int) -> tuple[jax.Array, int]:
 # -- quantize / dequantize ---------------------------------------------------
 
 
-def quantize(x: jax.Array, cfg: QuantConfig, key: Optional[jax.Array] = None) -> Quantized:
+def quantize(x: jax.Array, cfg: QuantConfig, key: Optional[jax.Array] = None,
+             backend: Optional[str] = None) -> Quantized:
     """Bucketed min-max quantization (paper Section 5).
 
     Each bucket b is mapped through ``v = (x - min_b) / scale_b`` into
     ``[0, levels]`` and rounded according to ``cfg.mode``.  For
     ``mode="shift"`` one shift per bucket is drawn (the paper applies Def. 1
     at the granularity it scales at, i.e. the bucket).
+
+    `backend` (default ``cfg.backend``) selects the fused Pallas
+    quantize→pack kernel or the jnp reference below — both draw identical
+    randomness from `key` and emit identical wire bytes.
     """
     if cfg.mode in ("shift", "stochastic") and key is None:
         raise ValueError(f"mode={cfg.mode!r} requires a PRNG key")
     buckets, size = _to_buckets(x, cfg.bucket_size)
     nb = buckets.shape[0]
+
+    if _kops.resolve_backend(backend or cfg.backend) == "pallas":
+        if cfg.mode == "stochastic":
+            if cfg.rand_bits == 16:
+                rand = jax.random.bits(key, buckets.shape, jnp.uint16).astype(jnp.float32)
+                rand_scale = 65536.0
+            else:
+                rand = jax.random.uniform(key, buckets.shape)
+                rand_scale = 1.0
+        elif cfg.mode == "shift":
+            rand = jax.random.uniform(key, (nb, 1), minval=-0.5, maxval=0.5)
+            rand_scale = 1.0
+        else:
+            rand = jnp.zeros((nb, 1), jnp.float32)
+            rand_scale = 1.0
+        codes, scale, zero = _kops.quantize_packed(
+            buckets, rand, cfg.levels, cfg.bits, cfg.mode, rand_scale
+        )
+        return Quantized(
+            codes=codes,
+            scale=scale[:, 0],
+            zero=zero[:, 0],
+            shape=tuple(x.shape),
+            size=size,
+            cfg=cfg,
+        )
+
+    codes, scale, zero = _quantize_jnp(buckets, key, cfg)
+    return Quantized(
+        codes=codes,
+        scale=scale,
+        zero=zero,
+        shape=tuple(x.shape),
+        size=size,
+        cfg=cfg,
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _quantize_jnp(buckets: jax.Array, key: Optional[jax.Array], cfg: QuantConfig):
+    """jnp reference core, jitted so the numerics (XLA's constant-division
+    strength reduction, mul+add -> fma fusion) are identical whether the
+    caller is eager or inside a larger jit — and therefore bit-identical to
+    the (always-jitted) Pallas kernel wrappers in ``kernels.ops``."""
+    nb = buckets.shape[0]
     lo = jnp.min(buckets, axis=1, keepdims=True)
     hi = jnp.max(buckets, axis=1, keepdims=True)
-    scale = jnp.maximum((hi - lo) / cfg.levels, 1e-12)
+    # reciprocal multiply, NOT division: XLA strength-reduces division by a
+    # constant to `* (1/c)` under jit but not in eager mode; the kernels use
+    # the same explicit multiply.
+    scale = jnp.maximum((hi - lo) * (1.0 / cfg.levels), 1e-12)
     v = (buckets - lo) / scale  # in [0, levels]
 
     if cfg.mode == "nearest":
@@ -222,26 +289,34 @@ def quantize(x: jax.Array, cfg: QuantConfig, key: Optional[jax.Array] = None) ->
         codes = jnp.round(v - r)
         zero = lo + r * scale  # fold shift into the affine decode
     codes = jnp.clip(codes, 0, cfg.levels).astype(jnp.uint8)
-    return Quantized(
-        codes=pack_codes(codes, cfg.bits),
-        scale=scale[:, 0],
-        zero=zero[:, 0],
-        shape=tuple(x.shape),
-        size=size,
-        cfg=cfg,
-    )
+    return pack_codes(codes, cfg.bits), scale[:, 0], zero[:, 0]
 
 
-def dequantize(q: Quantized, dtype=jnp.float32) -> jax.Array:
-    """Affine decode back to the original shape/dtype."""
-    codes = unpack_codes(q.codes, q.cfg.bits).astype(jnp.float32)
-    x = codes * q.scale[:, None] + q.zero[:, None]
-    return x.reshape(-1)[: q.size].reshape(q.shape).astype(dtype)
+def dequantize(q: Quantized, dtype=jnp.float32,
+               backend: Optional[str] = None) -> jax.Array:
+    """Affine decode back to the original shape/dtype (backend-dispatched:
+    fused Pallas unpack→dequantize kernel or the jnp reference)."""
+    if _kops.resolve_backend(backend or q.cfg.backend) == "pallas":
+        x = _kops.dequantize_packed(
+            q.codes, q.scale[:, None], q.zero[:, None], q.cfg.bits, dtype
+        )
+    else:
+        x = _dequantize_jnp(q.codes, q.scale, q.zero, q.cfg.bits, dtype)
+    return x.reshape(-1)[: q.size].reshape(q.shape)
 
 
-def quantize_dequantize(x: jax.Array, cfg: QuantConfig, key: Optional[jax.Array] = None) -> jax.Array:
+@partial(jax.jit, static_argnames=("bits", "dtype"))
+def _dequantize_jnp(codes: jax.Array, scale: jax.Array, zero: jax.Array,
+                    bits: int, dtype):
+    """jnp decode core (jitted — see :func:`_quantize_jnp`)."""
+    c = unpack_codes(codes, bits).astype(jnp.float32)
+    return (c * scale[:, None] + zero[:, None]).astype(dtype)
+
+
+def quantize_dequantize(x: jax.Array, cfg: QuantConfig, key: Optional[jax.Array] = None,
+                        backend: Optional[str] = None) -> jax.Array:
     """Fake-quant helper (used in single-device simulation and tests)."""
-    return dequantize(quantize(x, cfg, key), x.dtype)
+    return dequantize(quantize(x, cfg, key, backend=backend), x.dtype, backend=backend)
 
 
 # ---------------------------------------------------------------------------

@@ -36,6 +36,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from ..compat import axis_size
+
 MODEL_AXIS = "model"
 
 
@@ -83,7 +85,7 @@ def tp_split_tokens(x: jax.Array, dim: int = 0, axis: str = MODEL_AXIS) -> jax.A
 
 
 def _split(x, dim, axis):
-    p = lax.axis_size(axis)
+    p = axis_size(axis)
     r = lax.axis_index(axis)
     n = x.shape[dim] // p
     return lax.dynamic_slice_in_dim(x, r * n, n, axis=dim)
@@ -97,7 +99,7 @@ def _tp_split_bwd(dim, axis, _, ct):
     y = lax.all_gather(ct, axis, tiled=False)
     y = jnp.moveaxis(y, 0, dim)
     s = list(ct.shape)
-    s[dim] *= lax.axis_size(axis)
+    s[dim] *= axis_size(axis)
     return (y.reshape(s),)
 
 
@@ -120,7 +122,7 @@ def _merge(x, dim, axis):
     y = lax.all_gather(x, axis, tiled=False)
     y = jnp.moveaxis(y, 0, dim)
     s = list(x.shape)
-    s[dim] *= lax.axis_size(axis)
+    s[dim] *= axis_size(axis)
     return y.reshape(s)
 
 
@@ -147,7 +149,7 @@ def _ag(x, dim, axis):
     y = lax.all_gather(x, axis, tiled=False)  # (P, ...) leading
     y = jnp.moveaxis(y, 0, dim)
     s = list(x.shape)
-    s[dim] *= lax.axis_size(axis)
+    s[dim] *= axis_size(axis)
     return y.reshape(s)
 
 
@@ -156,7 +158,7 @@ def _tp_ag_fwd(x, dim, axis):
 
 
 def _tp_ag_bwd(dim, axis, _, ct):
-    p = lax.axis_size(axis)
+    p = axis_size(axis)
     s = list(ct.shape)
     ct = ct.reshape(*s[:dim], p, s[dim] // p, *s[dim + 1 :])
     ct = jnp.moveaxis(ct, dim, 0)

@@ -60,14 +60,21 @@ def rowquant_matmul_pallas(
 ) -> jax.Array:
     """y = x @ dequant(W).
 
-    x: (M, K) f32/bf16; codes: (K, N) u8; scale, zero: (K, 1) f32.
+    x: (M, K) f32/bf16; codes: (K, N) u8; scale, zero: (K, n_seg) f32 with
+    the affine constant over N-segments of size N / n_seg (n_seg == 1 is
+    per-row affine).  Each n-tile must lie inside one segment (block_n
+    divides the segment — arranged upstream in ops.py), so the kernel body
+    always sees a (BK, 1) affine tile regardless of n_seg.
     Shapes must tile evenly (pad upstream in ops.py).
     """
     m, k = x.shape
     k2, n = codes.shape
     assert k == k2, (k, k2)
+    n_seg = scale.shape[1]
     bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    seg_tiles = (n // bn) // n_seg  # n-tiles per affine segment
+    assert seg_tiles * n_seg == n // bn, (n, bn, n_seg)
     grid = (m // bm, n // bn, k // bk)
     kern = functools.partial(_dqmm_kernel, grid[2])
     out = pl.pallas_call(
@@ -76,8 +83,8 @@ def rowquant_matmul_pallas(
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((bk, 1), lambda i, j, kk: (kk, 0)),
-            pl.BlockSpec((bk, 1), lambda i, j, kk: (kk, 0)),
+            pl.BlockSpec((bk, 1), lambda i, j, kk: (kk, j // seg_tiles)),
+            pl.BlockSpec((bk, 1), lambda i, j, kk: (kk, j // seg_tiles)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),

@@ -10,10 +10,37 @@ TPU-native Pallas kernels:
     sublanes, i.e. one bucket == one full (8, 128) f32 VREG tile — min/max
     reductions over a bucket are intra-tile and cheap on the VPU;
   * a block of ROWS_PER_TILE buckets is staged in VMEM per grid step;
-  * randomness for stochastic rounding enters as a pre-generated uniform
-    array (same PRNG stream as the jnp reference, so tests are exact).
+  * randomness (stochastic-rounding uniforms, per-bucket random shifts)
+    enters as a pre-generated array drawn from the SAME PRNG stream as the
+    jnp reference in ``core.quant``, so the two backends are bit-exact.
 
-Validated in interpret mode on CPU against `ref.py` (bit-exact for codes).
+Wire format (must match ``core.quant`` exactly — it is what goes on the
+wire in the quantized collectives):
+
+  codes  u8 (nb, bucket_size * bits / 8)   bit-packed when 8 % bits == 0:
+         byte j of a bucket holds codes ``j*k .. j*k+k-1`` (k = 8/bits),
+         code ``j*k+i`` in bits ``[i*bits, (i+1)*bits)`` — little-endian
+         within the byte, identical to ``core.quant.pack_codes``;
+  scale  f32 (nb, 1)   per-bucket step ((max - min) / levels);
+  zero   f32 (nb, 1)   per-bucket affine offset (min, plus the folded-in
+         random shift for mode="shift").
+
+Two kernel families live here:
+
+  1. ``quantize_pallas`` / ``dequantize_pallas`` — the original unpacked
+     kernels (one u8 byte per code), kept for 3/5/6/7-bit widths and as
+     the simplest-possible reference kernels.
+  2. ``quantize_pack_pallas`` / ``unpack_dequantize_pallas`` — **fused**
+     quantize→bit-pack and bit-unpack→dequantize: sub-8-bit codes never
+     materialize as one-byte-per-code intermediates in HBM; the pack/unpack
+     shifts run on the VPU over the VMEM-resident tile.  These implement
+     all three rounding modes of the wire quantizer ("nearest",
+     "stochastic", "shift") and are the kernels ``core.quant`` dispatches
+     to (see the ``backend=`` / ``REPRO_QUANT_BACKEND`` /
+     ``REPRO_PALLAS_INTERPRET`` knobs documented in ``kernels.ops``).
+
+Validated in interpret mode on CPU against `ref.py` and ``core.quant``
+(bit-exact for codes and packed wire bytes).
 """
 from __future__ import annotations
 
@@ -30,7 +57,7 @@ def _quantize_kernel(levels: int, stochastic: bool, x_ref, rand_ref, codes_ref, 
     x = x_ref[...]  # (R, bucket) f32
     lo = jnp.min(x, axis=1, keepdims=True)
     hi = jnp.max(x, axis=1, keepdims=True)
-    scale = jnp.maximum((hi - lo) / levels, 1e-12)
+    scale = jnp.maximum((hi - lo) * (1.0 / levels), 1e-12)
     v = (x - lo) / scale
     if stochastic:
         f = jnp.floor(v)
@@ -77,6 +104,159 @@ def quantize_pallas(
         ],
         interpret=interpret,
     )(x, rand)
+
+
+# ---------------------------------------------------------------------------
+# Fused quantize -> bit-pack  (and bit-unpack -> dequantize below)
+# ---------------------------------------------------------------------------
+
+_MODES = ("nearest", "stochastic", "shift")
+
+
+def _pack_k(bits: int) -> int:
+    return 8 // bits if 8 % bits == 0 else 1
+
+
+def _quantize_pack_kernel(levels, bits, mode, rand_scale,
+                          x_ref, rand_ref, codes_ref, scale_ref, zero_ref):
+    """One (R, bucket) tile: bucketed min-max quantize with the selected
+    rounding mode, then bit-pack k = 8/bits codes per byte in-register.
+
+    The arithmetic is kept expression-for-expression identical to the jnp
+    reference path in ``core.quant.quantize`` so both backends produce the
+    same wire bytes.
+    """
+    x = x_ref[...]  # (R, bucket) f32
+    lo = jnp.min(x, axis=1, keepdims=True)
+    hi = jnp.max(x, axis=1, keepdims=True)
+    # `* (1/levels)` not `/ levels`: matches the jnp reference exactly in
+    # both eager and jit (XLA rewrites constant divisions to reciprocal
+    # multiplies under jit — see core.quant.quantize).
+    scale = jnp.maximum((hi - lo) * (1.0 / levels), 1e-12)
+    v = (x - lo) / scale
+    if mode == "stochastic":
+        f = jnp.floor(v)
+        up = rand_ref[...] < (v - f) * rand_scale
+        codes = f + up.astype(v.dtype)
+        zero = lo
+    elif mode == "shift":
+        r = rand_ref[...]  # (R, 1) shared shift per bucket
+        codes = jnp.round(v - r)
+        zero = lo + r * scale  # fold the shift into the affine decode
+    else:  # nearest
+        codes = jnp.round(v)
+        zero = lo
+    codes = jnp.clip(codes, 0, levels).astype(jnp.uint8)
+    k = _pack_k(bits)
+    if k > 1:
+        # strided-slice pack: byte j <- sum_i codes[:, j*k + i] << (i*bits).
+        # Slices keep everything 2D / lane-major (no tiny minor reshape).
+        packed = codes[:, 0::k]
+        for i in range(1, k):
+            packed = packed | (codes[:, i::k] << jnp.uint8(i * bits))
+    else:
+        packed = codes
+    codes_ref[...] = packed
+    scale_ref[...] = scale
+    zero_ref[...] = zero
+
+
+def quantize_pack_pallas(
+    x: jax.Array,
+    rand: jax.Array,
+    levels: int,
+    bits: int,
+    mode: str = "nearest",
+    rand_scale: float = 1.0,
+    *,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused quantize→pack.  x: (nb, bucket) f32, nb % ROWS_PER_TILE == 0.
+
+    rand: per-mode randomness, drawn upstream from the same PRNG stream as
+    the jnp reference —
+      * mode="stochastic": (nb, bucket) thresholds; ``up = rand < frac *
+        rand_scale`` (rand_scale=1 for f32 uniforms, 65536 for u16 raw bits);
+      * mode="shift": (nb, 1) per-bucket shifts in [-0.5, 0.5);
+      * mode="nearest": unused, pass (nb, 1) zeros.
+
+    Returns (packed codes u8 (nb, bucket*bits/8), scale (nb, 1), zero (nb, 1)).
+    """
+    assert mode in _MODES, mode
+    nb, bucket = x.shape
+    assert nb % ROWS_PER_TILE == 0, nb
+    k = _pack_k(bits)
+    assert bucket % k == 0, (bucket, k)
+    n_packed = bucket // k
+    grid = (nb // ROWS_PER_TILE,)
+    rand_cols = rand.shape[1]
+    kern = functools.partial(_quantize_pack_kernel, levels, bits, mode, rand_scale)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS_PER_TILE, bucket), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS_PER_TILE, rand_cols), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((ROWS_PER_TILE, n_packed), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS_PER_TILE, 1), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS_PER_TILE, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, n_packed), jnp.uint8),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, rand)
+
+
+def _unpack_dequantize_kernel(bits, out_dtype, codes_ref, scale_ref, zero_ref, out_ref):
+    packed = codes_ref[...]  # (R, bucket*bits/8) u8
+    k = _pack_k(bits)
+    if k > 1:
+        mask = jnp.uint8((1 << bits) - 1)
+        r, nbytes = packed.shape
+        # element j*k + i of a bucket lives in bits [i*bits, (i+1)*bits) of
+        # byte j; stack along a new minor axis then flatten re-interleaves.
+        parts = [(packed >> jnp.uint8(i * bits)) & mask for i in range(k)]
+        codes = jnp.stack(parts, axis=-1).reshape(r, nbytes * k)
+    else:
+        codes = packed
+    out_ref[...] = (codes.astype(jnp.float32) * scale_ref[...]
+                    + zero_ref[...]).astype(out_dtype)
+
+
+def unpack_dequantize_pallas(
+    codes: jax.Array,
+    scale: jax.Array,
+    zero: jax.Array,
+    bits: int,
+    dtype=jnp.float32,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused unpack→dequantize.  codes: (nb, bucket*bits/8) packed u8;
+    scale/zero: (nb, 1) f32.  Returns (nb, bucket) values in `dtype`."""
+    nb, n_packed = codes.shape
+    assert nb % ROWS_PER_TILE == 0, nb
+    k = _pack_k(bits)
+    bucket = n_packed * k
+    grid = (nb // ROWS_PER_TILE,)
+    kern = functools.partial(_unpack_dequantize_kernel, bits, dtype)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS_PER_TILE, n_packed), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS_PER_TILE, 1), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS_PER_TILE, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROWS_PER_TILE, bucket), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, bucket), dtype),
+        interpret=interpret,
+    )(codes, scale, zero)
 
 
 def _dequantize_kernel(out_dtype, codes_ref, scale_ref, zero_ref, out_ref):

@@ -19,7 +19,7 @@ def quantize_ref(
     """
     lo = jnp.min(x, axis=1, keepdims=True)
     hi = jnp.max(x, axis=1, keepdims=True)
-    scale = jnp.maximum((hi - lo) / levels, 1e-12)
+    scale = jnp.maximum((hi - lo) * (1.0 / levels), 1e-12)
     v = (x - lo) / scale
     if stochastic:
         f = jnp.floor(v)
@@ -40,11 +40,17 @@ def dequantize_ref(
 def rowquant_matmul_ref(
     x: jax.Array, codes: jax.Array, scale: jax.Array, zero: jax.Array
 ) -> jax.Array:
-    """y = x @ dequant(W) with per-K-row affine quantized W.
+    """y = x @ dequant(W) with per-(K-row, N-segment) affine quantized W.
 
-    x: (M, K) f32/bf16; codes: (K, N) u8; scale/zero: (K, 1) f32.
-    dequant(W)[k, n] = codes[k, n] * scale[k] + zero[k].
+    x: (M, K) f32/bf16; codes: (K, N) u8; scale/zero: (K, n_seg) f32 with
+    N % n_seg == 0 (n_seg == 1 is plain per-K-row affine).
+    dequant(W)[k, n] = codes[k, n] * scale[k, n // (N/n_seg)] + zero[...].
     """
+    n = codes.shape[1]
+    n_seg = scale.shape[1]
+    if n_seg > 1:
+        scale = jnp.repeat(scale, n // n_seg, axis=1)
+        zero = jnp.repeat(zero, n // n_seg, axis=1)
     w = codes.astype(jnp.float32) * scale + zero
     return (x.astype(jnp.float32) @ w).astype(x.dtype)
 
@@ -54,6 +60,6 @@ def quantize_rowwise_ref(w: jax.Array, levels: int) -> tuple[jax.Array, jax.Arra
     the layout consumed by the fused dequant-matmul kernel."""
     lo = jnp.min(w, axis=1, keepdims=True)
     hi = jnp.max(w, axis=1, keepdims=True)
-    scale = jnp.maximum((hi - lo) / levels, 1e-12)
+    scale = jnp.maximum((hi - lo) * (1.0 / levels), 1e-12)
     codes = jnp.clip(jnp.round((w - lo) / scale), 0, levels).astype(jnp.uint8)
     return codes, scale, lo

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from .. import configs
+from ..compat import shard_map
 from ..configs.inputs import input_specs
 from ..core.qsdp import QSDPConfig
 from ..models.config import SHAPES
@@ -68,7 +69,7 @@ def build_step(arch: str, shape_name: str, multi_pod: bool, qsdp: QSDPConfig,
         )
         batch_struct, key_struct = structs
         batch_spec, key_spec = specs
-        fn = jax.shard_map(step, mesh=mesh,
+        fn = shard_map(step, mesh=mesh,
                            in_specs=(sspec, batch_spec, key_spec),
                            out_specs=(sspec, {"loss": P(), "grad_norm": P(), "step": P()}),
                            check_vma=False)
@@ -87,7 +88,7 @@ def build_step(arch: str, shape_name: str, multi_pod: bool, qsdp: QSDPConfig,
         batch_struct, key_struct = structs
         batch_spec, key_spec = specs
         _, cache_specs = dm.cache_struct()
-        fn = jax.shard_map(dm.prefill_fn, mesh=mesh,
+        fn = shard_map(dm.prefill_fn, mesh=mesh,
                            in_specs=(pspecs, batch_spec, key_spec),
                            out_specs=(P(bax), cache_specs),
                            check_vma=False)
@@ -96,7 +97,7 @@ def build_step(arch: str, shape_name: str, multi_pod: bool, qsdp: QSDPConfig,
     # decode
     cache_structs, tok, pos, key_struct = structs
     cache_specs, tok_spec, pos_spec, key_spec = specs
-    fn = jax.shard_map(dm.decode_fn, mesh=mesh,
+    fn = shard_map(dm.decode_fn, mesh=mesh,
                        in_specs=(pspecs, cache_specs, tok_spec, pos_spec, key_spec),
                        out_specs=(tok_spec, cache_specs),
                        check_vma=False)

@@ -7,6 +7,12 @@ layer inside every prefill/decode step.  Decode is therefore dominated by
 weight all-gather bytes, exactly the regime where QSDP's wire compression
 pays off most; the roofline benchmark quantifies this.
 
+With ``DecodeSpec(rowquant_mlp=True)`` the dense-MLP weights skip the
+dequant step entirely: the gathered wire codes are reshaped (K, N) with
+their per-bucket affine as (K, N/bucket) segments and fed straight into
+the fused ``kernels.ops.rowquant_matmul`` kernel (see
+``QSDPEngine.gather_rowquant``).
+
 Cache layouts (global shapes; per-device views inside shard_map):
 
   attention KV  (L, B, S, n_kv, hd)   P(None, batch?, "model", None, None)
@@ -52,12 +58,17 @@ class DecodeSpec:
     batch_global: int
     batch_sharded: bool  # shard batch over FSDP axes?
     enc_len: int = 0  # audio: encoder memory length (capped)
+    # Decode the dense-MLP weights straight from their gathered wire codes
+    # through kernels.ops.rowquant_matmul instead of materializing the dense
+    # matrix (per-weight fallback when the wire layout doesn't tile rows —
+    # see QSDPEngine.rowquant_eligible).
+    rowquant_mlp: bool = False
 
     def batch_pspec(self, ms) -> tuple:
         return (ms.fsdp_axes,) if self.batch_sharded else (None,)
 
 
-def make_decode_spec(model: Model, shape) -> DecodeSpec:
+def make_decode_spec(model: Model, shape, rowquant_mlp: bool = False) -> DecodeSpec:
     """Derive the decode configuration from a ShapeConfig."""
     cfg = model.cfg
     s = shape.seq_len
@@ -73,6 +84,7 @@ def make_decode_spec(model: Model, shape) -> DecodeSpec:
         batch_global=shape.global_batch,
         batch_sharded=shape.global_batch % fsdp == 0,
         enc_len=min(4096, s // cfg.enc_frames_ratio) if cfg.arch_type == "audio" else 0,
+        rowquant_mlp=rowquant_mlp,
     )
 
 
@@ -243,6 +255,22 @@ class DecodeModel:
             x = x + y
         return x, kc_all, vc_all
 
+    _ROWQUANT_MLP = ("w_gate", "w_up", "w_down")
+
+    def _gather_layer_w(self, prefix, names, lw, lkey, mlp=None):
+        """Gather one layer's weights; when rowquant decode is enabled the
+        dense-MLP matmul weights come back as RowQuantWeights (wire codes +
+        per-bucket affine) and stay in code form through swiglu_mlp."""
+        m = self.m
+        out = {}
+        for n in names:
+            full = f"{prefix}/{n}"
+            if self.spec.rowquant_mlp and mlp == "dense" and n in self._ROWQUANT_MLP:
+                out[n] = m.engine.gather_rowquant(full, lw[n], lkey)
+            else:
+                out[n] = m.engine.gather(full, lw[n], lkey)
+        return out
+
     def _decode_attn_stack(self, params, prefix, x, cache, pos, cos, sin, key, mlp):
         m = self.m
         grp = m._group(params, prefix)
@@ -252,7 +280,7 @@ class DecodeModel:
             x, kc_all, vc_all = carry
             idx, lw = inp
             lkey = jax.random.fold_in(key, idx)
-            w = {n: m.engine.gather(f"{prefix}/{n}", lw[n], lkey) for n in names}
+            w = self._gather_layer_w(prefix, names, lw, lkey, mlp=mlp)
             x, kc_all, vc_all = self._decode_attn_layer(
                 x, w, kc_all, vc_all, idx, pos, cos, sin, mlp)
             return (x, kc_all, vc_all), None
@@ -344,8 +372,10 @@ class DecodeModel:
             (x, conv_all, ssm_all), _ = lax.scan(
                 layer_body, (x, conv_all, ssm_all), (jnp.arange(every), gw))
             skey = jax.random.fold_in(key, 5000 + gidx)
-            w = {n: m.engine.gather(f"shared/{n}", params[f"shared/{n}"], skey)
-                 for n in shared_names}
+            w = self._gather_layer_w(
+                "shared", shared_names,
+                {n: params[f"shared/{n}"] for n in shared_names}, skey,
+                mlp="dense")
             x, kc_all, vc_all = self._decode_attn_layer(
                 x, w, kc_all, vc_all, gidx, pos, cos, sin, "dense")
             return (x, conv_all, ssm_all, kc_all, vc_all), None
@@ -371,7 +401,7 @@ class DecodeModel:
             x, kc_all, vc_all = carry
             idx, lw, ck, cv = inp
             lkey = jax.random.fold_in(key, idx)
-            w = {n: m.engine.gather(f"dec/{n}", lw[n], lkey) for n in names}
+            w = self._gather_layer_w("dec", names, lw, lkey, mlp="dense")
             h = L.rms_norm(x, w["attn_norm"], cfg.norm_eps)
             q_all, k1, v1 = attn_mod.decode_new_kv(h, w, m.acfg, cos, sin)
             kc_all, vc_all = self._write_token_kv(kc_all, vc_all, idx, k1, v1, pos)

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..core.tp import tp_copy, tp_reduce
+from ..kernels.ops import RowQuantWeight, rowquant_matmul_dispatch
 
 # ---------------------------------------------------------------------------
 # Norms
@@ -196,12 +197,25 @@ def greedy_sample_vocab_parallel(logits_local: jax.Array, v_local: int) -> jax.A
 # ---------------------------------------------------------------------------
 
 
-def swiglu_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
-    """Column-parallel gate/up, row-parallel down."""
+def qmatmul(x: jax.Array, w) -> jax.Array:
+    """x @ w where w is either a dense array or a :class:`RowQuantWeight`
+    (a gathered weight still in QSDP wire-code form — consumed by the fused
+    dequant-matmul kernel without materializing the dense matrix).
+    Handles arbitrary leading batch dims on x."""
+    if isinstance(w, RowQuantWeight):
+        lead = x.shape[:-1]
+        y = rowquant_matmul_dispatch(x.reshape(-1, x.shape[-1]), w)
+        return y.reshape(*lead, w.codes.shape[1])
+    return x @ w
+
+
+def swiglu_mlp(x: jax.Array, w_gate, w_up, w_down) -> jax.Array:
+    """Column-parallel gate/up, row-parallel down.  Weights may be dense
+    arrays (training) or RowQuantWeights (quantized-weight decode)."""
     xi = tp_copy(x)
-    g = xi @ w_gate
-    u = xi @ w_up
-    return tp_reduce((jax.nn.silu(g) * u) @ w_down)
+    g = qmatmul(xi, w_gate)
+    u = qmatmul(xi, w_up)
+    return tp_reduce(qmatmul(jax.nn.silu(g) * u, w_down))
 
 
 def gelu_mlp(x: jax.Array, w_up: jax.Array, b_up, w_down: jax.Array, b_down) -> jax.Array:

@@ -4,6 +4,13 @@ The engine owns the shard_map plumbing; `DecodeModel` owns the per-device
 math.  Decoding re-gathers quantized weights layer-by-layer every step —
 FSDP-style serving — so step latency is collective-bound and QSDP's wire
 compression directly reduces it (see benchmarks/fig4_bandwidth_model.py).
+
+With ``DecodeSpec(rowquant_mlp=True)`` the dense-MLP weights additionally
+*stay in wire-code form* after the gather: the fused
+``kernels.ops.rowquant_matmul`` Pallas kernel consumes the gathered u8
+codes + per-bucket affine directly, so the dequantized matrix is never
+written to HBM (falls back to the dense path per weight when the wire
+buckets don't tile its rows — see ``QSDPEngine.rowquant_eligible``).
 """
 from __future__ import annotations
 
@@ -14,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from ..models.decode import DecodeModel, DecodeSpec, make_decode_spec
 from ..models.transformer import Model
 
@@ -35,7 +43,7 @@ class ServeEngine:
 
     def decode_step(self):
         if self._decode is None:
-            fn = jax.shard_map(
+            fn = shard_map(
                 self.dm.decode_fn, mesh=self.mesh,
                 in_specs=(self._pspecs, self.cache_pspecs, P(self.bax), P(), P()),
                 out_specs=(P(self.bax), self.cache_pspecs),
@@ -46,7 +54,7 @@ class ServeEngine:
 
     def prefill_step(self, batch_pspecs: dict):
         if self._prefill is None:
-            fn = jax.shard_map(
+            fn = shard_map(
                 self.dm.prefill_fn, mesh=self.mesh,
                 in_specs=(self._pspecs, batch_pspecs, P()),
                 out_specs=(P(self.bax), self.cache_pspecs),

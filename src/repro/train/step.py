@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from ..core.quant import QuantConfig, quantize_dequantize
 from ..models.transformer import Model
 from ..optim import Optimizer, OptState
@@ -146,7 +147,7 @@ def make_jitted_train_step(model: Model, optimizer: Optimizer, mesh, n_micro: in
     sspec = state_pspecs(model)
     if batch_pspec is None:
         batch_pspec = {"tokens": P(model.ms.fsdp_axes), "labels": P(model.ms.fsdp_axes)}
-    mapped = jax.shard_map(
+    mapped = shard_map(
         step, mesh=mesh,
         in_specs=(sspec, batch_pspec, P()),
         out_specs=(sspec, {"loss": P(), "grad_norm": P(), "step": P()}),

@@ -6,6 +6,13 @@ and by the dry-run (launch/dryrun.py) which forces 512 in-process.
 import jax
 import pytest
 
+try:
+    import hypothesis  # noqa: F401  (preferred: pip install -e .[test])
+except ImportError:  # hermetic environment — run properties as seeded sweeps
+    from _hypothesis_stub import install as _install_hypothesis_stub
+
+    _install_hypothesis_stub()
+
 
 @pytest.fixture(scope="session")
 def mesh11():

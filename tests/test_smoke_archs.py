@@ -8,6 +8,7 @@ from functools import partial
 from jax.sharding import PartitionSpec as P
 
 from repro import configs
+from repro.compat import shard_map
 from repro.core.qsdp import MeshSpec, QSDPConfig
 from repro.models.transformer import Model
 
@@ -44,7 +45,7 @@ def test_smoke_train_step(arch, mesh11):
     params = model.init_params(jax.random.PRNGKey(0))
     batch, bspecs = _batch(cfg)
 
-    @partial(jax.shard_map, mesh=mesh11,
+    @partial(shard_map, mesh=mesh11,
              in_specs=(model.param_pspecs(), bspecs, P()),
              out_specs=(P(), model.param_pspecs()), check_vma=False)
     def step(p, b, k):
