@@ -1,0 +1,157 @@
+"""Benchmark: end-to-end train-step cost of the wire formats.
+
+Compares, on an emulated (4 data x 2 model) 8-device CPU mesh (Pallas
+kernels in interpret mode — the *structure* of the compiled program is what
+matters here, the absolute ms are CPU numbers):
+
+  baseline-fsdp            fp32 weights / bf16 grads, per-tensor launches
+  qsdp                     W8G8, per-tensor launches (3 per quantized tensor)
+  qsdp-coalesced           W8G8, ONE u8 launch per layer gather / RS
+  qsdp-coalesced-prefetch  + double-buffered layer prefetch pipeline
+
+For each variant this measures
+  * per-step wall ms (median over --steps timed steps after a warmup),
+  * HLO collective-launch counts (trip-count-aware, per kind and per
+    operand dtype, via roofline.hlo_analyzer),
+  * HLO collective wire bytes + the engine's analytic per-step wire bytes,
+  * the analytic per-layer gather launch count (3 x n_params -> 1),
+
+and writes everything to BENCH_step.json (uploaded as a CI artifact by the
+workflow, so the perf trajectory accumulates across commits).
+
+Run:  PYTHONPATH=src python benchmarks/bench_step.py --smoke
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qsdp import MeshSpec, QSDPConfig, layer_gather_launches, step_comm_bytes
+from repro.data import SyntheticLM
+from repro.models.config import ModelConfig
+from repro.models.transformer import Model
+from repro.optim import AdamWConfig, make_adamw
+from repro.roofline.hlo_analyzer import analyze_hlo
+from repro.train.step import init_train_state, make_jitted_train_step
+
+
+def variants():
+    return {
+        "baseline-fsdp": QSDPConfig.baseline(),
+        "qsdp": QSDPConfig(coalesce=False),
+        "qsdp-coalesced": QSDPConfig(coalesce=True),
+        "qsdp-coalesced-prefetch": QSDPConfig(coalesce=True, prefetch=True),
+    }
+
+
+def bench_variant(name, qcfg, mcfg, mesh, ms, batch, n_micro, steps):
+    qcfg = dataclasses.replace(qcfg, min_quant_size=256)
+    model = Model(mcfg, ms, qcfg)
+    opt = make_adamw(AdamWConfig(lr=1e-3))
+    state = init_train_state(model, opt, jax.random.PRNGKey(0))
+    step = make_jitted_train_step(model, opt, mesh, n_micro=n_micro)
+
+    key = jax.random.PRNGKey(7)
+    with mesh:
+        t0 = time.perf_counter()
+        lowered = step.lower(state, batch, key)
+        compiled = lowered.compile()
+        compile_s = time.perf_counter() - t0
+        hlo = analyze_hlo(compiled.as_text())
+
+        state, metrics = step(state, batch, key)  # warmup (donated state)
+        float(metrics["loss"])
+        times = []
+        for i in range(steps):
+            t0 = time.perf_counter()
+            state, metrics = step(state, batch, jax.random.fold_in(key, i))
+            float(metrics["loss"])  # forces completion
+            times.append(1e3 * (time.perf_counter() - t0))
+
+    layer_names = [n for n in model.specs if n.startswith("layers/")]
+    comm = step_comm_bytes(model.engine, gathers_per_param=2 * n_micro,
+                           reduces_per_param=n_micro)
+    counts = hlo["collectives"]["counts"]
+    return {
+        "compile_s": round(compile_s, 1),
+        "step_ms_median": float(np.median(times)),
+        "step_ms_all": [round(t, 2) for t in times],
+        "loss_final": float(metrics["loss"]),
+        "layer_gather_launches_analytic": layer_gather_launches(
+            model.engine, layer_names),
+        "wire_bytes_analytic_per_step": comm,
+        "hlo_collective_bytes": hlo["collectives"]["total"],
+        "hlo_collective_launches": counts,
+        "hlo_launches_by_dtype": hlo["collectives"]["counts_by_dtype"],
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config for CI (fast compile, 3 timed steps)")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_step.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        dims = dict(n_layers=2, d_model=128, d_ff=256, seq=32, batch=8, micro=1)
+        steps = args.steps or 3
+    else:
+        dims = dict(n_layers=4, d_model=256, d_ff=512, seq=64, batch=8, micro=2)
+        steps = args.steps or 10
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    ms = MeshSpec(axes=("data", "model"), shape=(4, 2))
+    mcfg = ModelConfig(name="bench", arch_type="dense", n_layers=dims["n_layers"],
+                       d_model=dims["d_model"], vocab_size=512, n_heads=8,
+                       n_kv_heads=4, head_dim=dims["d_model"] // 8,
+                       d_ff=dims["d_ff"])
+    data = SyntheticLM(vocab_size=512, seq_len=dims["seq"],
+                       global_batch=dims["batch"], seed=1)
+    tokens, labels = data.sample(0)
+    batch = {"tokens": tokens, "labels": labels}
+
+    out = {"config": {**dims, "mesh": "4x2", "steps": steps,
+                      "smoke": bool(args.smoke)},
+           "variants": {}}
+    for name, qcfg in variants().items():
+        r = bench_variant(name, qcfg, mcfg, mesh, ms, batch, dims["micro"], steps)
+        out["variants"][name] = r
+        c = r["hlo_collective_launches"]
+        print(f"{name:24s} step {r['step_ms_median']:8.1f}ms  "
+              f"launches/layer-gather {r['layer_gather_launches_analytic']:2d}  "
+              f"HLO ag={c['all-gather']} a2a={c['all-to-all']} "
+              f"rs={c['reduce-scatter']} ar={c['all-reduce']}  "
+              f"wire {r['wire_bytes_analytic_per_step']['total'] / 2**20:.2f}MB")
+
+    base = out["variants"]["qsdp"]
+    co = out["variants"]["qsdp-coalesced"]
+    out["summary"] = {
+        "ag_launch_reduction": (base["hlo_collective_launches"]["all-gather"]
+                                / max(co["hlo_collective_launches"]["all-gather"], 1)),
+        "wire_bytes_ratio_co_vs_per_tensor": (
+            co["wire_bytes_analytic_per_step"]["total"]
+            / base["wire_bytes_analytic_per_step"]["total"]),
+    }
+    print(f"coalescing: {out['summary']['ag_launch_reduction']:.1f}x fewer "
+          f"all-gather launches at {out['summary']['wire_bytes_ratio_co_vs_per_tensor']:.3f}x "
+          f"the wire bytes")
+
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

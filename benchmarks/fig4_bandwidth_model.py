@@ -55,6 +55,13 @@ POLICIES = {
     "QSDP W4G4": QSDPConfig(weight_bits=4, grad_bits=4),
     "QSDP W8 G:fp16": QSDPConfig(quantize_grads=False),
     "QSDP G8 W:fp32": QSDPConfig(quantize_weights=False),
+    # bf16 per-bucket (scale, zero) metadata on the wire: shaves the
+    # metadata half of the overhead (meta_wire_dtype knob; wire-byte
+    # accounting picks it up via QuantConfig.meta_bytes)
+    "QSDP W8G8 bf16-meta": QSDPConfig(meta_wire_dtype="bfloat16"),
+    # 4-bit codes amplify the relative metadata cost -> bf16 meta helps more
+    "QSDP W4G4 bf16-meta": QSDPConfig(weight_bits=4, grad_bits=4,
+                                      meta_wire_dtype="bfloat16"),
 }
 
 # paper-calibrated compute seconds per optimizer step (V100 cluster)

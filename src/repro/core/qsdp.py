@@ -26,6 +26,30 @@ wrapped in ``jax.custom_vjp`` so the paper's 2×AllGather + 1×ReduceScatter
 per layer per step emerges naturally from ``jax.checkpoint``-rematerialized
 scan-over-layers.
 
+Coalesced wire format (``QSDPConfig.coalesce``, default on)
+-----------------------------------------------------------
+The per-tensor collectives cost 3 launches per quantized tensor (codes,
+scale, zero) — ~23 all-gather launches per transformer layer per direction.
+With ``coalesce=True`` every gather/reduce-scatter ships ONE contiguous u8
+wire buffer (``core.collectives.WireLayout``): :meth:`QSDPEngine.gather`
+coalesces a single tensor's three components, and
+:meth:`QSDPEngine.gather_layer` coalesces *all* params of a layer dict —
+quantized payloads and full-precision (filtered) ones alike — into one
+collective per layer.  The bytes on the wire and the decoded values are
+bit-identical to the per-tensor path (same per-tensor quantization keys);
+only the launch count changes: 3 × n_params -> 1.
+
+Double-buffered prefetch (``QSDPConfig.prefetch``, default off)
+---------------------------------------------------------------
+:meth:`QSDPEngine.gather_layer_start` issues the coalesced all-gather and
+returns the *wire buffer* (u8); :meth:`QSDPEngine.gather_layer_finish`
+decodes a previously gathered buffer and owns the backward reduce-scatter.
+``models.transformer._scan_layers`` uses the pair to run a software
+pipeline: the gather for layer i+1 is issued while layer i computes, the
+(compact, ``~bits/32``-sized) wire buffer rides the scan carry, and the
+rematerialized backward replays the same schedule — so the collective for
+the next layer can overlap the current layer's compute in both directions.
+
 Filtering (paper Section 5): normalization layers / biases / any tensor
 smaller than ``min_quant_size`` travel in full precision, as do all tensors
 when the engine is configured as the *baseline FSDP* (fp32 weights / bf16
@@ -241,10 +265,30 @@ class QSDPConfig:
     dequant_to_compute: bool = False
     # §Perf knob: u16 stochastic-rounding thresholds (4x less RNG traffic)
     rand_bits: int = 32
+    # §Perf knob: coalesced wire format — serialize codes + (scale, zero)
+    # metadata of every tensor of a gather (and of a whole layer dict via
+    # gather_layer) into ONE contiguous u8 buffer, so each layer gather /
+    # reduce-scatter is ONE collective launch instead of 3 x n_params.
+    # Bit-exact vs. the per-tensor collectives (same keys, same wire bytes).
+    coalesce: bool = True
+    # §Perf knob: double-buffered layer prefetch — the scan-over-layers
+    # issues the coalesced gather for layer i+1 while layer i computes,
+    # carrying the u8 wire buffer through the scan carry (forward AND the
+    # rematerialized backward).  Requires coalesce=True.  Costs one extra
+    # (discarded) gather per stack traversal and one wire buffer of
+    # residency per live layer.
+    prefetch: bool = False
+    # on-wire dtype of the per-bucket (scale, zero) quantization metadata:
+    # "float32" (exact) or "bfloat16" (halves metadata bytes; perturbs the
+    # decode affine by ~2^-8 relative).  Accounted by gather_wire_bytes /
+    # reduce_scatter_wire_bytes and the Fig-4 bandwidth model.
+    meta_wire_dtype: str = "float32"
 
     @classmethod
     def baseline(cls) -> "QSDPConfig":
-        return cls(quantize_weights=False, quantize_grads=False)
+        """The paper's FSDP baseline: fp32 weights / bf16 grads, per-tensor
+        collectives (no wire coalescing — torch-FSDP launches per leaf)."""
+        return cls(quantize_weights=False, quantize_grads=False, coalesce=False)
 
     @classmethod
     def w8g8(cls, **kw) -> "QSDPConfig":
@@ -252,11 +296,13 @@ class QSDPConfig:
 
     def wcfg(self) -> QuantConfig:
         return QuantConfig(bits=self.weight_bits, bucket_size=self.bucket_size,
-                           mode=self.weight_mode, rand_bits=self.rand_bits)
+                           mode=self.weight_mode, rand_bits=self.rand_bits,
+                           meta_dtype=self.meta_wire_dtype)
 
     def gcfg(self) -> QuantConfig:
         return QuantConfig(bits=self.grad_bits, bucket_size=self.bucket_size,
-                           mode=self.grad_mode, rand_bits=self.rand_bits)
+                           mode=self.grad_mode, rand_bits=self.rand_bits,
+                           meta_dtype=self.meta_wire_dtype)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -341,6 +387,166 @@ qsdp_gather.defvjp(_qsdp_gather_fwd, _qsdp_gather_bwd)
 
 
 # ---------------------------------------------------------------------------
+# Coalesced layer gather: ONE collective for all params of a layer dict.
+#
+# Three entry points (all over a tuple of flat shards, ordered by st.names):
+#
+#   qsdp_gather_layer(shards, key, st)          fused encode+gather+decode
+#   qsdp_gather_layer_start(shards, key, st)    encode + all-gather -> u8 wire
+#   qsdp_gather_layer_finish(shards, wire, key, st)   decode a carried wire
+#
+# start/finish split the op across scan iterations for the prefetch
+# pipeline: `start` has no custom VJP (its u8 output is non-differentiable,
+# so AD never touches the launch), while `finish` owns the whole backward —
+# its cotangent is reduce-scattered (coalesced, one launch) back to the
+# shards, exactly like the fused form.  The `shards` argument of `finish` is
+# unused in the primal (the wire already holds their quantized bytes); it
+# exists to give the VJP a differentiable path back to the parameters.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _LayerStatic:
+    """Hashable static payload for the coalesced layer gather."""
+
+    names: tuple[str, ...]  # full param names (buffer segment order)
+    n_locals: tuple[int, ...]  # per-device shard sizes
+    quant: tuple[bool, ...]  # weight path quantized per param
+    gquant: tuple[bool, ...]  # grad path quantized per param
+    gsync: tuple[bool, ...]  # psum grads over the model axis per param
+    fsdp_axes: tuple[str, ...]
+    model_axis: str
+    wcfg: Optional[QuantConfig]
+    gcfg: Optional[QuantConfig]
+    weight_wire_dtype: str
+    grad_wire_dtype: str
+    hierarchical: bool
+    gather_out_dtype: Optional[str] = None
+
+    @property
+    def pod_axis(self) -> Optional[str]:
+        return "pod" if "pod" in self.fsdp_axes else None
+
+    @property
+    def inner_axes(self) -> tuple[str, ...]:
+        return tuple(a for a in self.fsdp_axes if a != "pod")
+
+    def fsdp_size(self) -> int:
+        p = 1
+        for a in self.fsdp_axes:
+            p *= axis_size(a)
+        return p
+
+    def gather_layout(self) -> coll.WireLayout:
+        return coll.WireLayout(tuple(
+            coll.WireSegment(n, self.wcfg if q else None, self.weight_wire_dtype)
+            for n, q in zip(self.n_locals, self.quant)
+        ))
+
+    def rs_layout(self, chunk_div: int) -> coll.WireLayout:
+        """Layout of the grad RS rows when each tensor's full size
+        (p * n_local) is split into chunk_div chunks (one per destination
+        of the level being reduced)."""
+        p = self.fsdp_size()
+        return coll.WireLayout(tuple(
+            coll.WireSegment(n * p // chunk_div,
+                             self.gcfg if q else None, self.grad_wire_dtype)
+            for n, q in zip(self.n_locals, self.gquant)
+        ))
+
+
+def _layer_keys(key: jax.Array, st: _LayerStatic) -> list:
+    """Per-param gather keys — the same fold the per-tensor path applies, so
+    coalesced and per-tensor quantization draw identical randomness."""
+    return [jax.random.fold_in(key, _stable_hash(n)) for n in st.names]
+
+
+def _layer_encode_gather(shards, key: jax.Array, st: _LayerStatic) -> jax.Array:
+    keys = _layer_keys(key, st)
+    buf = coll.encode_wire([s.reshape(-1) for s in shards],
+                           st.gather_layout(), keys)
+    pod = st.pod_axis if st.hierarchical else None
+    return coll.gather_wire(buf, st.fsdp_axes, pod_axis=pod)
+
+
+def _layer_decode(wire: jax.Array, st: _LayerStatic):
+    out_dt = getattr(jnp, st.gather_out_dtype) if st.gather_out_dtype else jnp.float32
+    dts = [out_dt if q else jnp.float32 for q in st.quant]
+    return tuple(coll.decode_gathered_wire(
+        wire, st.gather_layout(), st.fsdp_size(), dts))
+
+
+def _layer_grad_rs(cts, key: jax.Array, st: _LayerStatic):
+    p = st.fsdp_size()
+    keys = [jax.random.fold_in(k, 0x5D) for k in _layer_keys(key, st)]
+    if st.hierarchical and st.pod_axis is not None:
+        p_inner = 1
+        for a in st.inner_axes:
+            p_inner *= axis_size(a)
+        outs = coll.reduce_scatter_coalesced_hierarchical(
+            cts, st.pod_axis, st.inner_axes,
+            st.rs_layout(p_inner), st.rs_layout(p), keys)
+    else:
+        outs = coll.reduce_scatter_coalesced(cts, st.fsdp_axes,
+                                             st.rs_layout(p), keys)
+    res = []
+    for g, sync in zip(outs, st.gsync):
+        g = g.astype(jnp.float32) / p
+        if sync:
+            g = lax.psum(g, st.model_axis)
+        res.append(g)
+    return tuple(res)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def qsdp_gather_layer(shards: tuple, key: jax.Array, st: _LayerStatic) -> tuple:
+    """Tuple of (n_local,) shards -> tuple of (P * n_local,) full flats,
+    via one coalesced all-gather (backward: one coalesced reduce-scatter)."""
+    return _layer_decode(_layer_encode_gather(shards, key, st), st)
+
+
+def _qsdp_gather_layer_fwd(shards, key, st):
+    return _layer_decode(_layer_encode_gather(shards, key, st), st), key
+
+
+def _qsdp_gather_layer_bwd(st, key, cts):
+    d = _layer_grad_rs([c.astype(jnp.float32) for c in cts], key, st)
+    return d, jnp.zeros_like(key)
+
+
+qsdp_gather_layer.defvjp(_qsdp_gather_layer_fwd, _qsdp_gather_layer_bwd)
+
+
+def qsdp_gather_layer_start(shards: tuple, key: jax.Array, st: _LayerStatic) -> jax.Array:
+    """Issue the coalesced all-gather; returns the (P * nbytes,) u8 wire
+    buffer (prefetch pipeline: call one scan step ahead of the compute)."""
+    return _layer_encode_gather(shards, key, st)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def qsdp_gather_layer_finish(shards: tuple, wire: jax.Array, key: jax.Array,
+                             st: _LayerStatic) -> tuple:
+    """Decode a wire buffer gathered by :func:`qsdp_gather_layer_start`.
+    The primal ignores `shards` (their bytes are already in `wire`); the
+    backward reduce-scatters the cotangents to them."""
+    return _layer_decode(wire, st)
+
+
+def _qsdp_gather_layer_finish_fwd(shards, wire, key, st):
+    return _layer_decode(wire, st), key
+
+
+def _qsdp_gather_layer_finish_bwd(st, key, cts):
+    d = _layer_grad_rs([c.astype(jnp.float32) for c in cts], key, st)
+    wire_len = st.fsdp_size() * st.gather_layout().nbytes
+    return d, jnp.zeros((wire_len,), jnp.uint8), jnp.zeros_like(key)
+
+
+qsdp_gather_layer_finish.defvjp(_qsdp_gather_layer_finish_fwd,
+                                _qsdp_gather_layer_finish_bwd)
+
+
+# ---------------------------------------------------------------------------
 # Engine
 # ---------------------------------------------------------------------------
 
@@ -364,13 +570,36 @@ class QSDPEngine:
             and spec.n_logical_local(self.ms.model_size) >= self.cfg.min_quant_size
         )
 
-    def _static_for(self, spec: ParamSpec) -> _GatherStatic:
-        quant = self._is_quantized(spec)
-        grad_quant = (
+    def _is_grad_quantized(self, spec: ParamSpec) -> bool:
+        return (
             spec.quantize
             and self.cfg.quantize_grads
             and spec.n_logical_local(self.ms.model_size) >= self.cfg.min_quant_size
         )
+
+    def _layer_static(self, names: tuple[str, ...]) -> _LayerStatic:
+        specs = [self.specs[n] for n in names]
+        return _LayerStatic(
+            names=names,
+            n_locals=tuple(s.n_local(self.ms) for s in specs),
+            quant=tuple(self._is_quantized(s) for s in specs),
+            gquant=tuple(self._is_grad_quantized(s) for s in specs),
+            gsync=tuple(s.grad_sync_model for s in specs),
+            fsdp_axes=self.ms.fsdp_axes,
+            model_axis=self.ms.model_axis,
+            wcfg=self.cfg.wcfg() if self.cfg.quantize_weights else None,
+            gcfg=self.cfg.gcfg() if self.cfg.quantize_grads else None,
+            weight_wire_dtype=self.cfg.weight_wire_dtype,
+            grad_wire_dtype=self.cfg.grad_wire_dtype,
+            hierarchical=self.cfg.hierarchical,
+            gather_out_dtype=(self.cfg.compute_dtype
+                              if getattr(self.cfg, "dequant_to_compute", False)
+                              else None),
+        )
+
+    def _static_for(self, spec: ParamSpec) -> _GatherStatic:
+        quant = self._is_quantized(spec)
+        grad_quant = self._is_grad_quantized(spec)
         return _GatherStatic(
             fsdp_axes=self.ms.fsdp_axes,
             model_axis=self.ms.model_axis,
@@ -387,20 +616,60 @@ class QSDPEngine:
 
     # -- per-device ops (inside shard_map) -----------------------------------
 
-    def gather(self, name: str, local: jax.Array, key: jax.Array) -> jax.Array:
-        """Materialize the TP-local tensor for parameter `name` from its
-        per-device flat shard (shape (..., 1, 1, n_local) or (n_local,))."""
+    def _reshape_full(self, name: str, full: jax.Array) -> jax.Array:
         spec = self.specs[name]
-        flat = local.reshape(-1)
-        key = jax.random.fold_in(key, _stable_hash(name))
-        full = qsdp_gather(flat, key, self._static_for(spec))
         n = spec.n_logical_local(self.ms.model_size)
         w = full[:n].reshape(spec.tp_local_shape(self.ms.model_size))
         return w.astype(self.compute_dtype)
 
-    def gather_layer(self, prefix: str, leaves: dict[str, jax.Array], key: jax.Array) -> dict[str, jax.Array]:
-        """Gather every parameter of one layer-dict."""
-        return {k: self.gather(f"{prefix}{k}", v, key) for k, v in leaves.items()}
+    def gather(self, name: str, local: jax.Array, key: jax.Array) -> jax.Array:
+        """Materialize the TP-local tensor for parameter `name` from its
+        per-device flat shard (shape (..., 1, 1, n_local) or (n_local,)).
+        Under ``cfg.coalesce`` the tensor's codes + metadata ride one
+        collective (single-segment wire buffer) instead of three."""
+        flat = local.reshape(-1)
+        if self.cfg.coalesce:
+            full = qsdp_gather_layer((flat,), key, self._layer_static((name,)))[0]
+            return self._reshape_full(name, full)
+        spec = self.specs[name]
+        key = jax.random.fold_in(key, _stable_hash(name))
+        full = qsdp_gather(flat, key, self._static_for(spec))
+        return self._reshape_full(name, full)
+
+    def gather_layer(self, prefix: str, leaves: dict[str, jax.Array],
+                     key: jax.Array) -> dict[str, jax.Array]:
+        """Gather every parameter of one layer-dict — ONE collective for the
+        whole layer under ``cfg.coalesce``, per-param otherwise."""
+        if not leaves:
+            return {}
+        if not self.cfg.coalesce:
+            return {k: self.gather(f"{prefix}{k}", v, key) for k, v in leaves.items()}
+        names, st, shards = self._layer_args(prefix, leaves)
+        fulls = qsdp_gather_layer(shards, key, st)
+        return {k: self._reshape_full(f"{prefix}{k}", f)
+                for k, f in zip(names, fulls)}
+
+    def gather_layer_start(self, prefix: str, leaves: dict[str, jax.Array],
+                           key: jax.Array) -> jax.Array:
+        """Prefetch pipeline, step 1: issue the coalesced all-gather for a
+        layer and return its u8 wire buffer (to be carried one scan step)."""
+        _, st, shards = self._layer_args(prefix, leaves)
+        return qsdp_gather_layer_start(shards, key, st)
+
+    def gather_layer_finish(self, prefix: str, leaves: dict[str, jax.Array],
+                            wire: jax.Array, key: jax.Array) -> dict[str, jax.Array]:
+        """Prefetch pipeline, step 2: decode the carried wire buffer into the
+        layer's TP-local tensors (backward: coalesced reduce-scatter)."""
+        names, st, shards = self._layer_args(prefix, leaves)
+        fulls = qsdp_gather_layer_finish(shards, wire, key, st)
+        return {k: self._reshape_full(f"{prefix}{k}", f)
+                for k, f in zip(names, fulls)}
+
+    def _layer_args(self, prefix: str, leaves: dict[str, jax.Array]):
+        names = tuple(sorted(leaves))
+        st = self._layer_static(tuple(f"{prefix}{k}" for k in names))
+        shards = tuple(leaves[k].reshape(-1) for k in names)
+        return names, st, shards
 
     # -- code-form gather (serve/decode; no VJP — inference only) -------------
 
@@ -511,3 +780,16 @@ def step_comm_bytes(
         wbytes += reps * gathers_per_param * coll.gather_wire_bytes(n_local_shard, p, wq, wfp)
         rbytes += reps * reduces_per_param * coll.reduce_scatter_wire_bytes(n_full, p, gq, gfp)
     return dict(weight_gather=wbytes, grad_reduce=rbytes, total=wbytes + rbytes)
+
+
+def layer_gather_launches(engine: QSDPEngine, names: list[str]) -> int:
+    """Analytic collective-launch count of ONE gather of the given params
+    (the quantity the coalesced wire format collapses): 3 per quantized
+    tensor (codes, scale, zero) + 1 per full-precision tensor when
+    per-tensor, 1 total when coalesced.  Hierarchical (two-level) gathers
+    double the quantized / coalesced launches (pod + in-pod)."""
+    levels = 2 if engine.cfg.hierarchical and engine.ms.multi_pod else 1
+    if engine.cfg.coalesce:
+        return levels
+    return sum(3 * levels if engine._is_quantized(engine.specs[n]) else 1
+               for n in names)

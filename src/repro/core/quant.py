@@ -106,12 +106,17 @@ class QuantConfig:
     # "auto" (kernels on TPU / under REPRO_PALLAS_INTERPRET, jnp otherwise).
     # Both backends emit identical wire bytes (tested bit-exact).
     backend: str = "auto"
+    # on-wire dtype of the per-bucket (scale, zero) metadata: "float32"
+    # (reference, exact) or "bfloat16" (halves metadata bytes; decode uses
+    # the rounded affine, a ~2^-8 relative perturbation of scale/zero).
+    meta_dtype: str = "float32"
 
     def __post_init__(self):
         assert 1 <= self.bits <= 8, self.bits
         assert self.mode in _MODES, self.mode
         assert self.rand_bits in (16, 32), self.rand_bits
         assert self.backend in ("auto", "jnp", "pallas"), self.backend
+        assert self.meta_dtype in ("float32", "bfloat16"), self.meta_dtype
 
     @property
     def levels(self) -> int:
@@ -125,6 +130,15 @@ class QuantConfig:
     def wire_bits(self) -> int:
         """Bits per value actually occupied in the packed uint8 stream."""
         return 8 // self.codes_per_byte
+
+    @property
+    def meta_bytes(self) -> int:
+        """Bytes per scale (or zero) entry on the wire."""
+        return 2 if self.meta_dtype == "bfloat16" else 4
+
+    @property
+    def meta_jnp_dtype(self):
+        return jnp.bfloat16 if self.meta_dtype == "bfloat16" else jnp.float32
 
 
 @jax.tree_util.register_pytree_node_class
@@ -156,7 +170,8 @@ class Quantized:
     @property
     def wire_bytes(self) -> int:
         """Exact bytes put on the wire (codes + per-bucket metadata)."""
-        return int(np.prod(self.codes.shape)) + 4 * (self.scale.shape[0] + self.zero.shape[0])
+        mb = self.cfg.meta_bytes
+        return int(np.prod(self.codes.shape)) + mb * (self.scale.shape[0] + self.zero.shape[0])
 
 
 # -- packing ----------------------------------------------------------------
@@ -341,4 +356,79 @@ def quantized_shapes(n: int, cfg: QuantConfig) -> dict:
 
 def wire_bytes(n: int, cfg: QuantConfig) -> int:
     s = quantized_shapes(n, cfg)
-    return int(np.prod(s["codes"])) + 8 * s["scale"][0]
+    return int(np.prod(s["codes"])) + 2 * cfg.meta_bytes * s["scale"][0]
+
+
+# ---------------------------------------------------------------------------
+# WireBuffer: serialize a Quantized (or a raw fp payload) into a single
+# contiguous uint8 segment, so a whole layer's parameters can ride ONE
+# collective instead of 3 x n_params (codes, scale, zero each).
+#
+# Segment layout of an n-element quantized tensor (all shapes static):
+#
+#     [ codes : nb * bucket/cpb bytes | scale : nb * mb | zero : nb * mb ]
+#
+# with mb = cfg.meta_bytes (4 for f32 metadata, 2 for bf16).  A raw fp
+# segment is simply the bitcast of the tensor in its wire dtype.  Encode and
+# decode are bit-exact inverses: unpacking a packed Quantized reproduces its
+# codes/scale/zero fields bit-for-bit (scale/zero modulo the meta_dtype
+# round-trip, which is the identity for float32).
+# ---------------------------------------------------------------------------
+
+
+def wire_segment_bytes(n: int, cfg: QuantConfig) -> int:
+    """Static byte length of the wire segment of an n-element tensor."""
+    return wire_bytes(n, cfg)
+
+
+def fp_segment_bytes(n: int, dtype_str: str) -> int:
+    return n * jnp.dtype(getattr(jnp, dtype_str)).itemsize
+
+
+def _f2b(x: jax.Array) -> jax.Array:
+    """(...,) float -> (..., itemsize) u8 bytes, flattened to 1-D."""
+    return jax.lax.bitcast_convert_type(x, jnp.uint8).reshape(-1)
+
+
+def wire_pack(q: Quantized) -> jax.Array:
+    """Serialize a Quantized into its contiguous (wire_segment_bytes,) u8
+    segment: packed codes, then scale bytes, then zero bytes."""
+    md = q.cfg.meta_jnp_dtype
+    return jnp.concatenate([
+        q.codes.reshape(-1),
+        _f2b(q.scale.astype(md)),
+        _f2b(q.zero.astype(md)),
+    ])
+
+
+def wire_unpack(buf: jax.Array, n: int, cfg: QuantConfig,
+                shape: Optional[tuple] = None) -> Quantized:
+    """Inverse of :func:`wire_pack` for an n-element tensor (scale/zero are
+    widened back to f32 so decode math is unchanged)."""
+    s = quantized_shapes(n, cfg)
+    nb = s["scale"][0]
+    cb = int(np.prod(s["codes"]))
+    mb = cfg.meta_bytes
+    codes = buf[:cb].reshape(s["codes"])
+    scale = jax.lax.bitcast_convert_type(
+        buf[cb:cb + nb * mb].reshape(nb, mb), cfg.meta_jnp_dtype
+    ).astype(jnp.float32)
+    zero = jax.lax.bitcast_convert_type(
+        buf[cb + nb * mb:cb + 2 * nb * mb].reshape(nb, mb), cfg.meta_jnp_dtype
+    ).astype(jnp.float32)
+    return Quantized(codes, scale, zero, shape or (n,), n, cfg)
+
+
+def fp_pack(x: jax.Array, dtype_str: str) -> jax.Array:
+    """Raw fp payload -> u8 segment (bitcast of the wire dtype — any fp
+    dtype string the per-tensor wire-dtype knobs accept, e.g. float16)."""
+    wd = getattr(jnp, dtype_str)
+    return _f2b(x.reshape(-1).astype(wd))
+
+
+def fp_unpack(buf: jax.Array, n: int, dtype_str: str) -> jax.Array:
+    """Inverse of :func:`fp_pack` -> (n,) f32."""
+    wd = getattr(jnp, dtype_str)
+    isz = jnp.dtype(wd).itemsize
+    return jax.lax.bitcast_convert_type(
+        buf.reshape(n, isz), wd).astype(jnp.float32)

@@ -295,6 +295,25 @@ def ring_slot(pos: jax.Array, window: int, s_loc: int):
     return slot - owner * s_loc, owner == rank
 
 
+def _kv_major_q(q_all: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                cfg: AttnConfig):
+    """Arrange the real query heads kv-major for the batched decode einsums.
+
+    Regular GQA (n_heads == n_kv * group) reshapes q to (B, n_kv, group, hd)
+    and attends the un-expanded cache directly (no group-x cache copy —
+    §Perf P2-2).  Irregular ratios (e.g. n_kv > n_heads, where the reshape
+    is impossible) gather each query head's kv head from the cache instead
+    and run the same einsums with a per-head group of 1."""
+    b, _, hd = q_all.shape
+    if cfg.n_heads == cfg.n_kv * cfg.group:
+        return (q_all[:, : cfg.n_heads].reshape(b, cfg.n_kv, cfg.group, hd),
+                k_cache, v_cache)
+    kv_idx = jnp.clip(jnp.arange(cfg.n_heads) // cfg.group, 0, cfg.n_kv - 1)
+    return (q_all[:, : cfg.n_heads].reshape(b, cfg.n_heads, 1, hd),
+            jnp.take(k_cache, kv_idx, axis=2),
+            jnp.take(v_cache, kv_idx, axis=2))
+
+
 def decode_attend(
     q_all: jax.Array,  # (B, Hp, hd) — all (padded) query heads
     k_cache: jax.Array,  # (B, S_loc, n_kv, hd) — this rank's seq chunk,
@@ -304,17 +323,16 @@ def decode_attend(
     window: int,
 ):
     """Flash-decode over the seq-sharded ring cache WITHOUT materializing a
-    GQA-expanded KV copy: real query heads are reshaped kv-major
-    (n_heads = n_kv * group always holds) and the score/AV einsums batch
-    over the kv-head axis directly against the un-expanded cache — this
-    removed a group-x cache-sized copy per layer (§Perf P2-2).  bf16
-    operands, f32 accumulation.  Returns (B, Hp, hd) f32 (padded heads
-    zero)."""
+    GQA-expanded KV copy: real query heads are reshaped kv-major (see
+    :func:`_kv_major_q`, which also handles irregular GQA ratios like
+    n_kv > n_heads) and the score/AV einsums batch over the kv-head axis
+    directly against the un-expanded cache — this removed a group-x
+    cache-sized copy per layer (§Perf P2-2).  bf16 operands, f32
+    accumulation.  Returns (B, Hp, hd) f32 (padded heads zero)."""
     b, hp, hd = q_all.shape
     s_loc = k_cache.shape[1]
     rank = lax.axis_index(MODEL_AXIS)
-    g = cfg.group
-    qr = q_all[:, : cfg.n_heads].reshape(b, cfg.n_kv, g, hd)
+    qr, k_cache, v_cache = _kv_major_q(q_all, k_cache, v_cache, cfg)
 
     # slot validity: slot s (global) holds position p_s = pos - ((pos-s) mod W)
     s_glob = rank * s_loc + jnp.arange(s_loc)
@@ -400,10 +418,9 @@ def decode_cross_attention(
     hd = cfg.head_dim
     s_loc = ck_cache.shape[1]
     rank = lax.axis_index(MODEL_AXIS)
-    g = cfg.group
     q = (x @ w["wq"]).reshape(b, cfg.heads_local, hd)
     q_all = lax.all_gather(q, MODEL_AXIS, axis=1, tiled=True)
-    qr = q_all[:, : cfg.n_heads].reshape(b, cfg.n_kv, g, hd)
+    qr, ck_cache, cv_cache = _kv_major_q(q_all, ck_cache, cv_cache, cfg)
     valid = (rank * s_loc + jnp.arange(s_loc)) < enc_len
     scale = 1.0 / math.sqrt(hd)
     s_ij = jnp.einsum("bkgd,bskd->bkgs", qr, ck_cache.astype(qr.dtype),

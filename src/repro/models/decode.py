@@ -258,17 +258,18 @@ class DecodeModel:
     _ROWQUANT_MLP = ("w_gate", "w_up", "w_down")
 
     def _gather_layer_w(self, prefix, names, lw, lkey, mlp=None):
-        """Gather one layer's weights; when rowquant decode is enabled the
-        dense-MLP matmul weights come back as RowQuantWeights (wire codes +
-        per-bucket affine) and stay in code form through swiglu_mlp."""
+        """Gather one layer's weights — one coalesced collective for the
+        dense/dequantized ones (see QSDPEngine.gather_layer); when rowquant
+        decode is enabled the dense-MLP matmul weights come back as
+        RowQuantWeights (wire codes + per-bucket affine) gathered separately
+        and stay in code form through swiglu_mlp."""
         m = self.m
-        out = {}
-        for n in names:
-            full = f"{prefix}/{n}"
-            if self.spec.rowquant_mlp and mlp == "dense" and n in self._ROWQUANT_MLP:
-                out[n] = m.engine.gather_rowquant(full, lw[n], lkey)
-            else:
-                out[n] = m.engine.gather(full, lw[n], lkey)
+        rq = [n for n in names
+              if self.spec.rowquant_mlp and mlp == "dense" and n in self._ROWQUANT_MLP]
+        out = m.engine.gather_layer(
+            f"{prefix}/", {n: lw[n] for n in names if n not in rq}, lkey)
+        for n in rq:
+            out[n] = m.engine.gather_rowquant(f"{prefix}/{n}", lw[n], lkey)
         return out
 
     def _decode_attn_stack(self, params, prefix, x, cache, pos, cos, sin, key, mlp):
@@ -315,7 +316,7 @@ class DecodeModel:
             x, conv_all, ssm_all = carry
             idx, lw = inp
             lkey = jax.random.fold_in(key, key_base + idx)
-            w = {n: m.engine.gather(f"{prefix}/{n}", lw[n], lkey) for n in names}
+            w = m.engine.gather_layer(f"{prefix}/", {n: lw[n] for n in names}, lkey)
             li = layer_offset + idx
             cv = lax.dynamic_index_in_dim(conv_all, li, 0, keepdims=False)
             st = lax.dynamic_index_in_dim(ssm_all, li, 0, keepdims=False)
@@ -357,8 +358,8 @@ class DecodeModel:
                 x, conv_all, ssm_all = inner
                 li_in_g, lw = inp2
                 lkey = jax.random.fold_in(gkey, li_in_g)
-                w = {n: m.engine.gather(f"layers/{n}", lw[n], lkey)
-                     for n in mamba_names}
+                w = m.engine.gather_layer(
+                    "layers/", {n: lw[n] for n in mamba_names}, lkey)
                 li = gidx * every + li_in_g
                 cv = lax.dynamic_index_in_dim(conv_all, li, 0, keepdims=False)
                 st = lax.dynamic_index_in_dim(ssm_all, li, 0, keepdims=False)
@@ -502,7 +503,7 @@ class DecodeModel:
         def body(x, inp):
             idx, lw = inp
             lkey = jax.random.fold_in(key, idx)
-            w = {n: m.engine.gather(f"{prefix}/{n}", lw[n], lkey) for n in names}
+            w = m.engine.gather_layer(f"{prefix}/", {n: lw[n] for n in names}, lkey)
             x, kc, vc = self._prefill_attn_layer(x, w, cos, sin, positions, mlp)
             return x, (kc, vc)
 
@@ -518,7 +519,7 @@ class DecodeModel:
         def body(x, inp):
             idx, lw = inp
             lkey = jax.random.fold_in(key, key_base + idx)
-            w = {n: m.engine.gather(f"{prefix}/{n}", lw[n], lkey) for n in names}
+            w = m.engine.gather_layer(f"{prefix}/", {n: lw[n] for n in names}, lkey)
             h = L.rms_norm(x, w["pre_norm"], cfg.norm_eps)
             mw = {k: v for k, v in w.items() if k != "pre_norm"}
             y, (cx, cbc, hf) = mamba_mod.mamba2_block(h, mw, m.mcfg, return_state=True)
@@ -547,8 +548,8 @@ class DecodeModel:
             gkey = jax.random.fold_in(key, 1000 + gidx)
             x, conv, ssm = self._prefill_mamba_stack(params, x, gkey, grp=gw)
             skey = jax.random.fold_in(key, 5000 + gidx)
-            w = {n: m.engine.gather(f"shared/{n}", params[f"shared/{n}"], skey)
-                 for n in shared_names}
+            w = m.engine.gather_layer(
+                "shared/", {n: params[f"shared/{n}"] for n in shared_names}, skey)
             x, kc, vc = self._prefill_attn_layer(x, w, cos, sin, positions, "dense")
             return x, (conv, ssm, kc, vc)
 
@@ -579,7 +580,7 @@ class DecodeModel:
         def body(x, inp):
             idx, lw = inp
             lkey = jax.random.fold_in(key, idx)
-            w = {n: m.engine.gather(f"dec/{n}", lw[n], lkey) for n in names}
+            w = m.engine.gather_layer("dec/", {n: lw[n] for n in names}, lkey)
             # self-attn with cache slice
             h = L.rms_norm(x, w["attn_norm"], cfg.norm_eps)
             a, (kf, vf) = attn_mod.self_attention(h, w, m.acfg, cos, sin, positions,

@@ -6,7 +6,10 @@ Parameters arrive in the engine's rest layout ((L?, 1, 1, n_local) local
 views) and are materialized per layer with quantized all-gathers inside the
 (rematerialized) scan over layers — reproducing FSDP's gather -> compute ->
 discard -> re-gather-in-backward schedule, with 2 AllGathers + 1
-ReduceScatter per layer per step.
+ReduceScatter per layer per step.  Each layer's params ride ONE coalesced
+u8 collective (QSDPConfig.coalesce), and with QSDPConfig.prefetch the scan
+is double-buffered so layer i+1's gather overlaps layer i's compute (see
+_scan_layers).
 """
 from __future__ import annotations
 
@@ -217,11 +220,8 @@ class Model:
         return {k[pl:]: v for k, v in params.items() if k.startswith(prefix + "/")}
 
     def _gather_block(self, params: Params, prefix: str, names: list[str], key: jax.Array) -> dict:
-        return {
-            n: self.engine.gather(f"{prefix}/{n}", params[f"{prefix}/{n}"], key)
-            for n in names
-            if f"{prefix}/{n}" in params
-        }
+        leaves = {n: params[f"{prefix}/{n}"] for n in names if f"{prefix}/{n}" in params}
+        return self.engine.gather_layer(f"{prefix}/", leaves, key)
 
     # ======================================================================
     # Training
@@ -283,18 +283,57 @@ class Model:
 
     def _scan_layers(self, params, prefix, x, key, cos, sin, positions, layer_fn,
                      carry_aux=False, group=None):
+        """Scan over a stacked layer group, gathering each layer's params
+        inside the (rematerialized) body.
+
+        Under ``qcfg.coalesce`` each layer's params ride ONE collective
+        (see QSDPEngine.gather_layer).  Under ``qcfg.prefetch`` the scan is
+        additionally software-pipelined (double-buffered): iteration i
+        decodes the wire buffer gathered during iteration i-1 and *issues*
+        the coalesced gather for layer i+1 before computing layer i, so the
+        next layer's collective overlaps this layer's compute — in the
+        forward and, because the remat backward replays the same body, in
+        the backward too.  The u8 wire buffer is the scan carry; a prologue
+        gather feeds layer 0 and the final (wrapped-around) gather's result
+        is discarded.
+        """
+        eng = self.engine
         grp = group if group is not None else self._group(params, prefix)
         names = list(grp.keys())
         stack = grp[names[0]].shape[0]
-
-        def body(carry, inp):
-            idx, lw = inp
-            lkey = jax.random.fold_in(key, idx)
-            w = {n: self.engine.gather(f"{prefix}/{n}", lw[n], lkey) for n in names}
-            return layer_fn(carry, w, cos, sin, positions), None
-
+        pfx = f"{prefix}/"
         init = (x, jnp.zeros((), jnp.float32)) if carry_aux else x
-        out, _ = lax.scan(self.remat(body), init, (jnp.arange(stack), grp))
+
+        pipelined = self.qcfg.prefetch and self.qcfg.coalesce and stack > 1
+        if not pipelined:
+            def body(carry, inp):
+                idx, lw = inp
+                lkey = jax.random.fold_in(key, idx)
+                w = eng.gather_layer(pfx, {n: lw[n] for n in names}, lkey)
+                return layer_fn(carry, w, cos, sin, positions), None
+
+            out, _ = lax.scan(self.remat(body), init, (jnp.arange(stack), grp))
+        else:
+            wire0 = eng.gather_layer_start(
+                pfx, {k: v[0] for k, v in grp.items()}, jax.random.fold_in(key, 0))
+
+            def body(carry, inp):
+                core, wire = carry
+                idx, lw = inp
+                lkey = jax.random.fold_in(key, idx)
+                w = eng.gather_layer_finish(pfx, {n: lw[n] for n in names}, wire, lkey)
+                # next layer's shards read straight from the (scan-invariant)
+                # closed-over stack — no rolled copy of the params; the wrap
+                # to layer 0 on the last step is the discarded epilogue gather
+                nxt = jnp.mod(idx + 1, stack)
+                lw_next = {n: lax.dynamic_index_in_dim(grp[n], nxt, 0, keepdims=False)
+                           for n in names}
+                wire_next = eng.gather_layer_start(
+                    pfx, lw_next, jax.random.fold_in(key, idx + 1))
+                return (layer_fn(core, w, cos, sin, positions), wire_next), None
+
+            (out, _), _ = lax.scan(self.remat(body), (init, wire0),
+                                   (jnp.arange(stack), grp))
         if carry_aux:
             x, self._aux = out
             return x

@@ -125,6 +125,10 @@ class CompStats:
     # data movement, collectives, RNG only)
     wire: Optional[dict] = None
     counts: Optional[dict] = None
+    # launch counts per "<kind>:<dtype>" (e.g. "all-gather:u8") — separates
+    # quantized-payload launches from fp metadata/fallback launches, which
+    # is how the coalesced-wire regression tests assert 1 launch per layer.
+    counts_dt: Optional[dict] = None
 
 
 def _split(hlo_text: str) -> tuple[dict[str, list[Instr]], Optional[str]]:
@@ -199,7 +203,8 @@ def analyze_hlo(hlo_text: str) -> dict:
     def run(name: str, stack: frozenset) -> CompStats:
         if name in memo:
             return memo[name]
-        st = CompStats(wire=dict.fromkeys(kinds, 0), counts=dict.fromkeys(kinds, 0))
+        st = CompStats(wire=dict.fromkeys(kinds, 0), counts=dict.fromkeys(kinds, 0),
+                       counts_dt={})
         if name in stack or name not in comps:
             return st
         types = {i.name: i.type_str for i in comps[name]}
@@ -226,6 +231,8 @@ def analyze_hlo(hlo_text: str) -> dict:
                     for k in kinds:
                         st.wire[k] += trips * sub.wire[k]
                         st.counts[k] += trips * sub.counts[k]
+                    for k2, v in sub.counts_dt.items():
+                        st.counts_dt[k2] = st.counts_dt.get(k2, 0) + trips * v
             elif i.op == "call":
                 m = re.search(r"to_apply=%([\w.\-]+)", i.line)
                 if m:
@@ -236,6 +243,8 @@ def analyze_hlo(hlo_text: str) -> dict:
                     for k in kinds:
                         st.wire[k] += sub.wire[k]
                         st.counts[k] += sub.counts[k]
+                    for k2, v in sub.counts_dt.items():
+                        st.counts_dt[k2] = st.counts_dt.get(k2, 0) + v
             elif i.op == "conditional":
                 for m in re.finditer(r"(?:true_computation|false_computation|branch_computations=\{)[^,)]*%([\w.\-]+)", i.line):
                     sub = run(m.group(1), stack | {name})
@@ -245,14 +254,25 @@ def analyze_hlo(hlo_text: str) -> dict:
 
             base = i.op.replace("-start", "")
             if base in kinds and not i.op.endswith("-done"):
-                type_str = i.type_str
-                if i.op.endswith("-start") and type_str.startswith("("):
-                    type_str = type_str.split(",")[-1]
-                rbytes = _type_bytes(type_str)
+                dims = _parse_dims(i.type_str)
+                if i.op.endswith("-start") and i.type_str.startswith("("):
+                    # async form: (operand, result[, ...]) tuple type — the
+                    # RESULT buffer is the last shape (naive comma-splitting
+                    # breaks on the commas inside shapes like u8[8,32])
+                    dims = dims[-1:]
+                rbytes = 0
+                for dt, d in dims:
+                    n_el = 1
+                    for x in d:
+                        n_el *= x
+                    rbytes += n_el * _DTYPE_BYTES[dt]
                 g = _group_size(i.line)
                 if g > 1:
                     st.wire[base] += _wire_bytes(base, rbytes, g)
                     st.counts[base] += 1
+                    dt = dims[0][0] if dims else "?"
+                    k2 = f"{base}:{dt}"
+                    st.counts_dt[k2] = st.counts_dt.get(k2, 0) + 1
 
             if (i.op not in _SKIP_TRAFFIC and i.op not in _ELEMENTWISE_FUSED
                     and not i.op.endswith("-done")):
@@ -355,6 +375,7 @@ def analyze_hlo(hlo_text: str) -> dict:
     wire = dict(st.wire)
     wire["total"] = sum(st.wire.values())
     wire["counts"] = st.counts
+    wire["counts_by_dtype"] = st.counts_dt
     return {
         "flops": st.flops,
         "traffic_bytes": st.traffic,

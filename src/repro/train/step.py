@@ -11,6 +11,15 @@ Schedule per optimizer step (paper Figure 5 + Appendix A):
   AdamW update on the f32 master shards         (local, sharded)
   [optional] Q^w re-quantization of the master  (theory-faithful mode)
 
+Under ``QSDPConfig.coalesce`` every per-layer AllGather / ReduceScatter
+above is ONE u8 collective launch carrying the whole layer's coalesced wire
+buffer (codes + metadata + filtered-fp payloads) instead of 3 x n_params
+launches — same bytes, same decoded values, ~20x fewer launches (see
+core/qsdp.py).  Under ``QSDPConfig.prefetch`` the scan-over-layers inside
+``Model.loss_fn`` is additionally double-buffered: layer i+1's gather is
+in flight while layer i computes, in the forward and the rematerialized
+backward alike (``benchmarks/bench_step.py`` measures all three schedules).
+
 Gradient semantics: `Model.loss_fn` returns the per-device local-batch mean
 with no collectives on the loss path; the engine's reduce-scatter backward
 divides by the FSDP size, so accumulated grads are exact global-batch means.

@@ -7,6 +7,10 @@ subprocesses with XLA_FLAGS=--xla_force_host_platform_device_count=8:
   * scripts/check_distributed.py — numerical correctness of the quantized
     collectives, hierarchical variants, engine gathers, TP gradients vs a
     single-device replica, and decode==prefill consistency.
+  * scripts/check_coalesced.py — bit-exactness of the coalesced wire format
+    vs. the per-tensor collectives (all bits/modes/backends, hierarchical,
+    bf16 metadata, engine + prefetch pipeline) and the HLO regression that
+    a coalesced layer gather is exactly ONE u8 all-gather launch.
 """
 import os
 import subprocess
@@ -30,6 +34,14 @@ def _run(script, timeout=900):
 @pytest.mark.slow
 def test_distributed_numerics():
     r = _run("check_distributed.py")
+    assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-4000:]
+    assert "ALL-OK" in r.stdout
+    assert "FAIL " not in r.stdout
+
+
+@pytest.mark.slow
+def test_coalesced_wire_format():
+    r = _run("check_coalesced.py")
     assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-4000:]
     assert "ALL-OK" in r.stdout
     assert "FAIL " not in r.stdout
