@@ -15,11 +15,17 @@ For each variant this measures
     operand dtype, via roofline.hlo_analyzer),
   * HLO collective wire bytes + the engine's analytic per-step wire bytes,
   * the analytic per-layer gather launch count (3 x n_params -> 1),
+  * train-state bytes (total + per-device) and checkpoint payload bytes,
+    so BENCH_step.json tracks the quantized-state memory win,
 
 and writes everything to BENCH_step.json (uploaded as a CI artifact by the
 workflow, so the perf trajectory accumulates across commits).
 
-Run:  PYTHONPATH=src python benchmarks/bench_step.py --smoke
+``--quantized-state`` adds the qsdp-quantized-state row: the coalesced
+schedule with the train state resting in packed wire-code form
+(QuantizedParam masters + 8-bit Adam moments, ckpt format v2).
+
+Run:  PYTHONPATH=src python benchmarks/bench_step.py --smoke --quantized-state
 """
 import os
 
@@ -29,6 +35,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import argparse
 import dataclasses
 import json
+import tempfile
 import time
 
 import jax
@@ -41,24 +48,47 @@ from repro.models.config import ModelConfig
 from repro.models.transformer import Model
 from repro.optim import AdamWConfig, make_adamw
 from repro.roofline.hlo_analyzer import analyze_hlo
-from repro.train.step import init_train_state, make_jitted_train_step
+from repro.train.checkpoint import checkpoint_payload_bytes, save_checkpoint
+from repro.train.step import (init_train_state, make_jitted_train_step,
+                              quantize_train_state)
 
 
-def variants():
-    return {
+def variants(quantized_state=False):
+    v = {
         "baseline-fsdp": QSDPConfig.baseline(),
         "qsdp": QSDPConfig(coalesce=False),
         "qsdp-coalesced": QSDPConfig(coalesce=True),
         "qsdp-coalesced-prefetch": QSDPConfig(coalesce=True, prefetch=True),
     }
+    if quantized_state:
+        # train state rests as packed wire codes: QuantizedParam masters
+        # + 8-bit Adam moments (checkpoint format v2)
+        v["qsdp-quantized-state"] = QSDPConfig(coalesce=True)
+    return v
+
+
+def state_and_ckpt_bytes(state, n_devices):
+    """Exact train-state bytes (device arrays) + checkpoint payload bytes."""
+    total = sum(l.nbytes for l in jax.tree.leaves(state))
+    with tempfile.TemporaryDirectory() as td:
+        save_checkpoint(td, state)
+        ckpt = sum(checkpoint_payload_bytes(td).values())
+    return {"train_state_bytes": int(total),
+            "train_state_bytes_per_device": int(total) // n_devices,
+            "ckpt_payload_bytes": int(ckpt)}
 
 
 def bench_variant(name, qcfg, mcfg, mesh, ms, batch, n_micro, steps):
     qcfg = dataclasses.replace(qcfg, min_quant_size=256)
+    quantized_state = name == "qsdp-quantized-state"
     model = Model(mcfg, ms, qcfg)
-    opt = make_adamw(AdamWConfig(lr=1e-3))
+    opt = make_adamw(AdamWConfig(lr=1e-3,
+                                 moment_bits=8 if quantized_state else None))
     state = init_train_state(model, opt, jax.random.PRNGKey(0))
-    step = make_jitted_train_step(model, opt, mesh, n_micro=n_micro)
+    if quantized_state:
+        state = quantize_train_state(state, model, jax.random.PRNGKey(1))
+    step = make_jitted_train_step(model, opt, mesh, n_micro=n_micro,
+                                  quantized_state=quantized_state)
 
     key = jax.random.PRNGKey(7)
     with mesh:
@@ -81,7 +111,9 @@ def bench_variant(name, qcfg, mcfg, mesh, ms, batch, n_micro, steps):
     comm = step_comm_bytes(model.engine, gathers_per_param=2 * n_micro,
                            reduces_per_param=n_micro)
     counts = hlo["collectives"]["counts"]
+    mem = state_and_ckpt_bytes(state, len(mesh.devices.flat))
     return {
+        **mem,
         "compile_s": round(compile_s, 1),
         "step_ms_median": float(np.median(times)),
         "step_ms_all": [round(t, 2) for t in times],
@@ -99,6 +131,9 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config for CI (fast compile, 3 timed steps)")
+    ap.add_argument("--quantized-state", action="store_true",
+                    help="add the qsdp-quantized-state row (packed masters "
+                         "+ 8-bit moments)")
     ap.add_argument("--steps", type=int, default=None)
     ap.add_argument("--out", default="BENCH_step.json")
     args = ap.parse_args(argv)
@@ -124,7 +159,7 @@ def main(argv=None):
     out = {"config": {**dims, "mesh": "4x2", "steps": steps,
                       "smoke": bool(args.smoke)},
            "variants": {}}
-    for name, qcfg in variants().items():
+    for name, qcfg in variants(args.quantized_state).items():
         r = bench_variant(name, qcfg, mcfg, mesh, ms, batch, dims["micro"], steps)
         out["variants"][name] = r
         c = r["hlo_collective_launches"]
@@ -132,7 +167,9 @@ def main(argv=None):
               f"launches/layer-gather {r['layer_gather_launches_analytic']:2d}  "
               f"HLO ag={c['all-gather']} a2a={c['all-to-all']} "
               f"rs={c['reduce-scatter']} ar={c['all-reduce']}  "
-              f"wire {r['wire_bytes_analytic_per_step']['total'] / 2**20:.2f}MB")
+              f"wire {r['wire_bytes_analytic_per_step']['total'] / 2**20:.2f}MB  "
+              f"state {r['train_state_bytes'] / 2**20:.2f}MB "
+              f"ckpt {r['ckpt_payload_bytes'] / 2**20:.2f}MB")
 
     base = out["variants"]["qsdp"]
     co = out["variants"]["qsdp-coalesced"]
@@ -143,6 +180,15 @@ def main(argv=None):
             co["wire_bytes_analytic_per_step"]["total"]
             / base["wire_bytes_analytic_per_step"]["total"]),
     }
+    if "qsdp-quantized-state" in out["variants"]:
+        qs = out["variants"]["qsdp-quantized-state"]
+        out["summary"]["state_bytes_ratio_qstate_vs_f32"] = (
+            qs["train_state_bytes"] / co["train_state_bytes"])
+        out["summary"]["ckpt_bytes_ratio_qstate_vs_f32"] = (
+            qs["ckpt_payload_bytes"] / co["ckpt_payload_bytes"])
+        print(f"quantized state: {out['summary']['state_bytes_ratio_qstate_vs_f32']:.3f}x "
+              f"train-state bytes, {out['summary']['ckpt_bytes_ratio_qstate_vs_f32']:.3f}x "
+              f"checkpoint bytes vs f32")
     print(f"coalescing: {out['summary']['ag_launch_reduction']:.1f}x fewer "
           f"all-gather launches at {out['summary']['wire_bytes_ratio_co_vs_per_tensor']:.3f}x "
           f"the wire bytes")

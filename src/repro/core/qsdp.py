@@ -71,7 +71,7 @@ from jax.sharding import PartitionSpec as P
 from ..compat import axis_size
 from ..kernels.ops import RowQuantWeight
 from . import collectives as coll
-from .quant import QuantConfig, quantize
+from .quant import QuantConfig, QuantizedParam, quantize, wire_unpack
 
 # ---------------------------------------------------------------------------
 # Mesh description
@@ -673,29 +673,49 @@ class QSDPEngine:
 
     # -- code-form gather (serve/decode; no VJP — inference only) -------------
 
-    def rowquant_eligible(self, name: str) -> bool:
-        """A gathered weight can stay in code form through the matmul iff the
-        wire buckets tile its rows exactly: 2D (K, N) tp-local shape, 8-bit
-        codes (one byte per value on the wire), N a multiple of the bucket
-        size, and an FSDP shard that is a whole number of buckets (no
-        padding anywhere, so global bucket b covers flat elements
-        [b*bsz, (b+1)*bsz) of the row-major weight)."""
-        spec = self.specs[name]
-        if not self._is_quantized(spec) or self.cfg.hierarchical:
-            return False
-        wcfg = self.cfg.wcfg()
+    def _rowquant_tiling_ok(self, spec: ParamSpec, cfg: QuantConfig) -> bool:
+        """Do `cfg`'s buckets tile this weight's rows exactly?  2D (K, N)
+        tp-local shape, 8-bit codes (one byte per value on the wire), N a
+        multiple of the bucket size, and an FSDP shard that is a whole
+        number of buckets (no padding anywhere, so global bucket b covers
+        flat elements [b*bsz, (b+1)*bsz) of the row-major weight).
+
+        NB stacked (scan-over-layers) params are gathered one layer slice
+        at a time, so shape/n here are already per-layer quantities."""
         shape = spec.tp_local_shape(self.ms.model_size)
         n = spec.n_logical_local(self.ms.model_size)
         p = self.ms.fsdp_size
-        # NB stacked (scan-over-layers) params are gathered one layer slice
-        # at a time, so `shape`/`n` here are already per-layer quantities.
         return (
-            wcfg.bits == 8
+            cfg.bits == 8
+            and not self.cfg.hierarchical
             and len(shape) == 2
-            and shape[1] % wcfg.bucket_size == 0
+            and shape[1] % cfg.bucket_size == 0
             and n % p == 0
-            and (n // p) % wcfg.bucket_size == 0
+            and (n // p) % cfg.bucket_size == 0
         )
+
+    def _assemble_rowquant(self, spec: ParamSpec, cfg: QuantConfig,
+                           q) -> RowQuantWeight:
+        """All-gather a shard's (codes, scale, zero) over FSDP and reshape
+        into the (K, N) / (K, n_seg) RowQuantWeight layout."""
+        codes = lax.all_gather(q.codes, self.ms.fsdp_axes, tiled=True)
+        scale = lax.all_gather(q.scale, self.ms.fsdp_axes, tiled=True)
+        zero = lax.all_gather(q.zero, self.ms.fsdp_axes, tiled=True)
+        k_dim, n_dim = spec.tp_local_shape(self.ms.model_size)
+        n_seg = n_dim // cfg.bucket_size
+        return RowQuantWeight(
+            codes=codes.reshape(k_dim, n_dim),
+            scale=scale.reshape(k_dim, n_seg),
+            zero=zero.reshape(k_dim, n_seg),
+        )
+
+    def rowquant_eligible(self, name: str) -> bool:
+        """A gathered weight can stay in code form through the matmul iff
+        the engine quantizes it and the wire buckets tile its rows (see
+        :meth:`_rowquant_tiling_ok`)."""
+        spec = self.specs[name]
+        return (self._is_quantized(spec)
+                and self._rowquant_tiling_ok(spec, self.cfg.wcfg()))
 
     def gather_rowquant(self, name: str, local: jax.Array, key: jax.Array):
         """All-gather parameter `name` but return it as a
@@ -713,17 +733,27 @@ class QSDPEngine:
         wcfg = self.cfg.wcfg()
         flat = local.reshape(-1)
         key = jax.random.fold_in(key, _stable_hash(name))
-        q = quantize(flat, wcfg, key)
-        codes = lax.all_gather(q.codes, self.ms.fsdp_axes, tiled=True)
-        scale = lax.all_gather(q.scale, self.ms.fsdp_axes, tiled=True)
-        zero = lax.all_gather(q.zero, self.ms.fsdp_axes, tiled=True)
-        k_dim, n_dim = spec.tp_local_shape(self.ms.model_size)
-        n_seg = n_dim // wcfg.bucket_size
-        return RowQuantWeight(
-            codes=codes.reshape(k_dim, n_dim),
-            scale=scale.reshape(k_dim, n_seg),
-            zero=zero.reshape(k_dim, n_seg),
-        )
+        return self._assemble_rowquant(spec, wcfg, quantize(flat, wcfg, key))
+
+    def rowquant_wire_eligible(self, name: str, qp: QuantizedParam) -> bool:
+        """Like :meth:`rowquant_eligible`, but for a parameter whose rest
+        state already IS wire codes (quantized train state / checkpoint v2):
+        the stored buckets must tile the weight's rows with no padding.
+        Independent of the engine's comm policy — the codes exist whether or
+        not this engine quantizes its own collectives."""
+        return (qp.cfg.meta_dtype == "float32"
+                and self._rowquant_tiling_ok(self.specs[name], qp.cfg))
+
+    def gather_rowquant_wire(self, name: str, qp: QuantizedParam) -> RowQuantWeight:
+        """All-gather a parameter stored as wire codes straight into a
+        :class:`RowQuantWeight`: no quantize on the way out, no dequantize on
+        the way in — the checkpoint/train-state bytes feed
+        ``kernels.ops.rowquant_matmul`` directly (inference only).
+
+        `qp` is the per-device view (wire (1, 1, nbytes), cell (n_local,));
+        caller guarantees :meth:`rowquant_wire_eligible`."""
+        q = wire_unpack(qp.wire.reshape(-1), qp.n, qp.cfg)
+        return self._assemble_rowquant(self.specs[name], qp.cfg, q)
 
     # -- host-side helpers ----------------------------------------------------
 

@@ -432,3 +432,148 @@ def fp_unpack(buf: jax.Array, n: int, dtype_str: str) -> jax.Array:
     isz = jnp.dtype(wd).itemsize
     return jax.lax.bitcast_convert_type(
         buf.reshape(n, isz), wd).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# QuantizedParam: a rest-layout train-state leaf kept in packed wire-code
+# form (the paper's "maintain only quantized weights" — Theorem 2).
+#
+# A rest-layout f32 leaf has shape (stack?, MODEL, FSDP, n_local): each
+# (model, fsdp) *cell* holds that device's flat shard, (stack?, n_local).
+# A QuantizedParam stores, per cell, the :func:`wire_pack` serialization of
+# the cell flattened in (stack, n_local) order — exactly the array the
+# in-step master quantization (train/step.py, quantize_master=True) feeds
+# to :func:`quantize` on that device — so dequantizing a QuantizedParam is
+# bit-identical to the value the f32 QDQ path would have stored.
+#
+#     wire : u8 (*lead, nbytes)   lead = (MODEL, FSDP) host-side,
+#                                 (1, 1) per-device inside shard_map,
+#                                 (stack, MODEL, FSDP) after a stack split
+#     nbytes = wire_segment_bytes(prod(cell_shape), cfg)
+#
+# The same pytree therefore shards with P("model", fsdp_axes, None) and
+# flows through shard_map / jit / checkpointing like any other leaf, at
+# ~bits/32 of the f32 bytes (+ per-bucket metadata).
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedParam:
+    """A parameter (or optimizer-moment) leaf stored as packed wire codes.
+
+    wire:       uint8, (*lead, nbytes) — per-cell :func:`wire_pack` output.
+    cell_shape: decoded shape per lead cell — (n_local,) for plain leaves,
+                (stack, n_local) for scan-over-layers stacks (the stack dim
+                is flattened *into* the cell so bucket boundaries match the
+                in-step master quantization exactly).
+    cfg:        the QuantConfig the codes were produced with.
+    """
+
+    wire: jax.Array
+    cell_shape: tuple
+    cfg: QuantConfig
+
+    def tree_flatten(self):
+        return (self.wire,), (self.cell_shape, self.cfg)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    @property
+    def n(self) -> int:
+        """Decoded f32 elements per cell."""
+        return int(np.prod(self.cell_shape))
+
+    @property
+    def stacked(self) -> bool:
+        return len(self.cell_shape) == 2
+
+
+def qparam_encode(x: jax.Array, cfg: QuantConfig,
+                  key: Optional[jax.Array] = None,
+                  backend: Optional[str] = None) -> QuantizedParam:
+    """Rest-layout f32 leaf (stack?, A, B, n_local) -> QuantizedParam.
+
+    Every (A, B) cell is flattened in (stack, n_local) order and quantized
+    with the SAME `key` — mirroring the in-step master quantization, where
+    the step key is mesh-replicated and each device quantizes its own local
+    view with it.  Works on host-global arrays (A, B) = (MODEL, FSDP) and on
+    per-device views (A, B) = (1, 1) alike; the single-cell case runs the
+    exact non-vmapped :func:`quantize` code path of the QDQ master."""
+    if x.ndim == 4:
+        cell_shape = (x.shape[0], x.shape[-1])
+        xc = jnp.moveaxis(x, 0, 2)  # (A, B, stack, n_local)
+    elif x.ndim == 3:
+        cell_shape = (x.shape[-1],)
+        xc = x
+    else:
+        raise ValueError(f"rest-layout leaf must be rank 3 or 4, got {x.shape}")
+    lead = xc.shape[:2]
+    n = int(np.prod(cell_shape))
+    cells = xc.reshape(lead[0] * lead[1], n)
+
+    def enc(v):
+        return wire_pack(quantize(v, cfg, key, backend=backend))
+
+    if cells.shape[0] == 1:
+        wire = enc(cells[0])[None]
+    else:
+        wire = jax.vmap(enc)(cells)
+    return QuantizedParam(wire.reshape(*lead, -1), cell_shape, cfg)
+
+
+def qparam_decode(qp: QuantizedParam, dtype=jnp.float32,
+                  backend: Optional[str] = None) -> jax.Array:
+    """QuantizedParam -> rest-layout dense leaf.
+
+    Output shape is (*lead, *cell) with a stacked cell's stack dim moved
+    back to the front: (stack?, A, B, n_local) — the exact inverse of
+    :func:`qparam_encode`'s layout.  Deterministic, so decoding on any host
+    or device reproduces the QDQ master values bit-for-bit."""
+    lead = qp.wire.shape[:-1]
+    flat = qp.wire.reshape(-1, qp.wire.shape[-1])
+
+    def dec(b):
+        return dequantize(wire_unpack(b, qp.n, qp.cfg), dtype, backend=backend)
+
+    if flat.shape[0] == 1:
+        out = dec(flat[0]).reshape(*lead, *qp.cell_shape)
+    else:
+        out = jax.vmap(dec)(flat).reshape(*lead, *qp.cell_shape)
+    if qp.stacked:
+        out = jnp.moveaxis(out, -2, 0)
+    return out
+
+
+def qparam_wire_nbytes(cell_shape: tuple, cfg: QuantConfig) -> int:
+    """Static per-cell wire length of a QuantizedParam."""
+    return wire_segment_bytes(int(np.prod(cell_shape)), cfg)
+
+
+def qparam_split_stack(qp: QuantizedParam) -> QuantizedParam:
+    """Re-slice a stacked QuantizedParam into per-stack-slice wire segments:
+    wire (*lead, nbytes) -> (stack, *lead, nbytes_slice), cell (n_local,).
+
+    Requires bucket-aligned slices (n_local % bucket_size == 0) so every
+    stack slice owns whole buckets; each output slice is then a valid wire
+    segment of its own (codes | scale | zero) whose decode equals the
+    corresponding rows of the full decode bit-for-bit.  This is what lets
+    serve scan over the layers of a checkpointed stack while keeping the
+    codes in wire form (see QSDPEngine.gather_rowquant_wire)."""
+    assert qp.stacked, qp.cell_shape
+    stack, n_local = qp.cell_shape
+    cfg = qp.cfg
+    assert n_local % cfg.bucket_size == 0, (n_local, cfg.bucket_size)
+    nb_s = n_local // cfg.bucket_size
+    cb_s = nb_s * (cfg.bucket_size // cfg.codes_per_byte)
+    mb = cfg.meta_bytes
+    lead = qp.wire.shape[:-1]
+    cb = cb_s * stack
+    sb = nb_s * mb * stack
+    codes = qp.wire[..., :cb].reshape(*lead, stack, cb_s)
+    scale = qp.wire[..., cb:cb + sb].reshape(*lead, stack, nb_s * mb)
+    zero = qp.wire[..., cb + sb:].reshape(*lead, stack, nb_s * mb)
+    wire = jnp.concatenate([codes, scale, zero], axis=-1)
+    return QuantizedParam(jnp.moveaxis(wire, -2, 0), (n_local,), cfg)

@@ -24,7 +24,11 @@ from ..data import SyntheticLM, make_batch
 from ..models.transformer import Model
 from ..optim import AdamWConfig, cosine_schedule, make_adamw
 from ..train.checkpoint import save_checkpoint
-from ..train.step import init_train_state, make_jitted_train_step
+from ..train.step import (
+    init_train_state,
+    make_jitted_train_step,
+    quantize_train_state,
+)
 
 
 def build_qsdp(args) -> QSDPConfig:
@@ -55,7 +59,14 @@ def main(argv=None):
     ap.add_argument("--bucket", type=int, default=1024)
     ap.add_argument("--min-quant-size", type=int, default=2048)
     ap.add_argument("--hierarchical", action="store_true")
-    ap.add_argument("--quantize-master", action="store_true")
+    ap.add_argument("--quantize-master", action="store_true",
+                    help="f32 state, QDQ-round-tripped through Q^w each step")
+    ap.add_argument("--quantized-state", action="store_true",
+                    help="theory-faithful quantized-domain state: master "
+                         "weights rest as packed wire codes (QuantizedParam)")
+    ap.add_argument("--master-bits", type=int, default=8)
+    ap.add_argument("--moment-bits", type=int, default=None,
+                    help="store Adam mu/nu as packed codes of this width")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt", type=str, default=None)
@@ -72,15 +83,25 @@ def main(argv=None):
     model = Model(cfg, ms, qsdp)
 
     sched = cosine_schedule(args.lr, args.warmup, args.steps)
-    opt = make_adamw(AdamWConfig(lr=args.lr, schedule=sched))
+    opt = make_adamw(AdamWConfig(lr=args.lr, schedule=sched,
+                                 moment_bits=args.moment_bits))
     state = init_train_state(model, opt, jax.random.PRNGKey(args.seed))
+    if args.quantized_state:
+        state = quantize_train_state(
+            state, model, jax.random.PRNGKey(args.seed + 2),
+            master_bits=args.master_bits)
 
     data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
                        global_batch=args.batch, seed=args.seed)
     step = make_jitted_train_step(model, opt, mesh, n_micro=args.n_micro,
-                                  quantize_master=args.quantize_master)
+                                  quantize_master=args.quantize_master,
+                                  master_bits=args.master_bits,
+                                  quantized_state=args.quantized_state)
 
     tag = "baseline-FSDP" if args.baseline else f"QSDP W{args.wbits}G{args.gbits}"
+    if args.quantized_state:
+        tag += f" qstate{args.master_bits}" + (
+            f"m{args.moment_bits}" if args.moment_bits else "")
     print(f"# {cfg.name} [{tag}] mesh=({args.data_par},{args.model_par}) "
           f"batch={args.batch} seq={args.seq} params~{cfg.n_params()/1e6:.1f}M "
           f"bigram-floor={data.bigram_entropy():.3f} nats")

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from ..core.quant import QuantizedParam
 from . import attention as attn_mod
 from . import layers as L
 from . import mamba as mamba_mod
@@ -48,6 +49,10 @@ from .transformer import Model
 
 Params = dict[str, jax.Array]
 Cache = dict[str, Any]
+
+# dense-MLP weights that may stay in wire-code form through swiglu_mlp
+# (rowquant decode and serve.engine.prepare_wire_params share this list)
+ROWQUANT_MLP = ("w_gate", "w_up", "w_down")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -255,19 +260,29 @@ class DecodeModel:
             x = x + y
         return x, kc_all, vc_all
 
-    _ROWQUANT_MLP = ("w_gate", "w_up", "w_down")
+    _ROWQUANT_MLP = ROWQUANT_MLP
 
     def _gather_layer_w(self, prefix, names, lw, lkey, mlp=None):
         """Gather one layer's weights — one coalesced collective for the
         dense/dequantized ones (see QSDPEngine.gather_layer); when rowquant
         decode is enabled the dense-MLP matmul weights come back as
         RowQuantWeights (wire codes + per-bucket affine) gathered separately
-        and stay in code form through swiglu_mlp."""
+        and stay in code form through swiglu_mlp.
+
+        Leaves that arrive as QuantizedParam (quantized train state /
+        checkpoint-v2 serving, prepared by ``serve.engine
+        .prepare_wire_params``) are all-gathered straight from their stored
+        codes (QSDPEngine.gather_rowquant_wire) — zero re-quantization."""
         m = self.m
+        wire = [n for n in names if isinstance(lw[n], QuantizedParam)]
         rq = [n for n in names
-              if self.spec.rowquant_mlp and mlp == "dense" and n in self._ROWQUANT_MLP]
+              if n not in wire
+              and self.spec.rowquant_mlp and mlp == "dense" and n in self._ROWQUANT_MLP]
         out = m.engine.gather_layer(
-            f"{prefix}/", {n: lw[n] for n in names if n not in rq}, lkey)
+            f"{prefix}/", {n: lw[n] for n in names if n not in rq and n not in wire},
+            lkey)
+        for n in wire:
+            out[n] = m.engine.gather_rowquant_wire(f"{prefix}/{n}", lw[n])
         for n in rq:
             out[n] = m.engine.gather_rowquant(f"{prefix}/{n}", lw[n], lkey)
         return out
@@ -286,7 +301,7 @@ class DecodeModel:
                 x, w, kc_all, vc_all, idx, pos, cos, sin, mlp)
             return (x, kc_all, vc_all), None
 
-        nl = grp[names[0]].shape[0]
+        nl = jax.tree.leaves(grp)[0].shape[0]
         (x, k_new, v_new), _ = lax.scan(
             body, (x, cache["k"], cache["v"]), (jnp.arange(nl), grp))
         cache = dict(cache, k=k_new, v=v_new)
@@ -503,11 +518,14 @@ class DecodeModel:
         def body(x, inp):
             idx, lw = inp
             lkey = jax.random.fold_in(key, idx)
-            w = m.engine.gather_layer(f"{prefix}/", {n: lw[n] for n in names}, lkey)
+            # mlp=None: rowquant stays a decode-only optimization in prefill,
+            # but wire-form (QuantizedParam) leaves still route to their
+            # code-form gather.
+            w = self._gather_layer_w(prefix, names, lw, lkey, mlp=None)
             x, kc, vc = self._prefill_attn_layer(x, w, cos, sin, positions, mlp)
             return x, (kc, vc)
 
-        nl = grp[names[0]].shape[0]
+        nl = jax.tree.leaves(grp)[0].shape[0]
         x, (k, v) = lax.scan(jax.checkpoint(body), x, (jnp.arange(nl), grp))
         return x, {"k": k, "v": v}
 

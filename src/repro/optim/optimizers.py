@@ -18,6 +18,8 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from ..core.quant import QuantConfig, QuantizedParam, qparam_decode, qparam_encode
+
 Params = dict[str, jax.Array]
 
 
@@ -33,6 +35,9 @@ class Optimizer:
 
     init: Callable[[Params], OptState]
     update: Callable[[Params, Params, OptState], tuple[Params, OptState]]
+    # True when this optimizer stores its mu/nu moments as QuantizedParam
+    # wire codes (AdamWConfig.moment_bits) — state_pspecs keys off it.
+    quantized_moments: bool = False
 
 
 def cosine_schedule(
@@ -62,6 +67,13 @@ class AdamWConfig:
     weight_decay: float = 0.0
     grad_clip: float = 1.0  # global-norm clip; 0 disables
     schedule: Optional[Callable[[jax.Array], jax.Array]] = None
+    # Store mu/nu as packed wire codes (QuantizedParam) of this width, in
+    # the SDP4Bit quantized-optimizer-state direction: each step decodes
+    # the moment shard, applies the f32 Adam math, and re-quantizes with
+    # deterministic nearest rounding (bucketed min-max keeps nu >= 0).
+    # None (default) keeps exact f32 moments.
+    moment_bits: Optional[int] = None
+    moment_bucket_size: int = 1024
 
 
 def _global_norm(tree) -> jax.Array:
@@ -80,9 +92,24 @@ def _clip_by_global_norm(grads, max_norm: float):
 
 
 def make_adamw(cfg: AdamWConfig) -> Optimizer:
+    # Optional quantized moments: nearest rounding is deterministic (no key
+    # threading through the update) and the bucketed min-max affine maps
+    # zeros to exact zeros, so a fresh init is represented losslessly.
+    mq = (QuantConfig(bits=cfg.moment_bits, bucket_size=cfg.moment_bucket_size,
+                      mode="nearest")
+          if cfg.moment_bits else None)
+
+    def _enc(m):
+        return qparam_encode(m, mq) if mq is not None else m
+
+    def _dec(m):
+        return qparam_decode(m) if isinstance(m, QuantizedParam) else m
+
     def init(params: Params) -> OptState:
         zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
-        return OptState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=jax.tree.map(jnp.copy, zeros))
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu={k: _enc(v) for k, v in zeros.items()},
+                        nu={k: _enc(jnp.copy(v)) for k, v in zeros.items()})
 
     def update(params: Params, grads: Params, st: OptState, grad_scale: jax.Array = 1.0):
         step = st.step + 1
@@ -93,14 +120,14 @@ def make_adamw(cfg: AdamWConfig) -> Optimizer:
 
         def upd(p, g, m, v):
             g = g.astype(jnp.float32) * grad_scale
-            m = b1 * m + (1 - b1) * g
-            v = b2 * v + (1 - b2) * g * g
+            m = b1 * _dec(m) + (1 - b1) * g
+            v = b2 * _dec(v) + (1 - b2) * g * g
             mh = m / c1
             vh = v / c2
             step_dir = mh / (jnp.sqrt(vh) + cfg.eps)
             if cfg.weight_decay:
                 step_dir = step_dir + cfg.weight_decay * p.astype(jnp.float32)
-            return (p.astype(jnp.float32) - lr * step_dir).astype(p.dtype), m, v
+            return (p.astype(jnp.float32) - lr * step_dir).astype(p.dtype), _enc(m), _enc(v)
 
         out = {
             k: upd(params[k], grads[k], st.mu[k], st.nu[k]) for k in params
@@ -110,7 +137,7 @@ def make_adamw(cfg: AdamWConfig) -> Optimizer:
         new_v = {k: o[2] for k, o in out.items()}
         return new_p, OptState(step=step, mu=new_m, nu=new_v)
 
-    return Optimizer(init=init, update=update)
+    return Optimizer(init=init, update=update, quantized_moments=mq is not None)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -11,6 +11,13 @@ With ``DecodeSpec(rowquant_mlp=True)`` the dense-MLP weights additionally
 codes + per-bucket affine directly, so the dequantized matrix is never
 written to HBM (falls back to the dense path per weight when the wire
 buckets don't tile its rows — see ``QSDPEngine.rowquant_eligible``).
+
+Quantized-domain checkpoints (format v2, ``quantized_state=True`` training)
+serve with ZERO conversion: :func:`prepare_wire_params` keeps the eligible
+dense-MLP weights as their stored wire codes — sliced per layer so the
+scan-over-layers can carry them — and the per-step gather ships those
+exact bytes into a RowQuantWeight (``QSDPEngine.gather_rowquant_wire``);
+everything else is decoded once, host-side, to its exact f32 values.
 """
 from __future__ import annotations
 
@@ -22,19 +29,65 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
-from ..models.decode import DecodeModel, DecodeSpec, make_decode_spec
+from ..core.quant import QuantizedParam, qparam_decode, qparam_split_stack
+from ..models.decode import ROWQUANT_MLP, DecodeModel, DecodeSpec, make_decode_spec
 from ..models.transformer import Model
 
 
+def prepare_wire_params(model: Model, params: dict) -> dict:
+    """Host-side: adapt a (possibly quantized-domain) train-state params
+    dict for serving.
+
+    QuantizedParam leaves that are rowquant-eligible dense-MLP weights of a
+    dense/VLM stack keep their wire codes — stacked leaves are re-sliced
+    per layer (``qparam_split_stack``) so ``lax.scan`` can carry them — and
+    are consumed by ``QSDPEngine.gather_rowquant_wire`` with no
+    re-quantization.  Every other QuantizedParam is decoded to its exact
+    f32 rest-layout values (deterministic)."""
+    out = {}
+    eng = model.engine
+    for name, v in params.items():
+        if not isinstance(v, QuantizedParam):
+            out[name] = v
+            continue
+        base = name.rsplit("/", 1)[-1]
+        if (model.cfg.arch_type in ("dense", "vlm")
+                and name.startswith("layers/")
+                and base in ROWQUANT_MLP
+                and eng.rowquant_wire_eligible(name, v)):
+            out[name] = qparam_split_stack(v) if v.stacked else v
+        else:
+            out[name] = qparam_decode(v)
+    return out
+
+
+def wire_param_pspecs(model: Model, params: dict) -> dict:
+    """Per-leaf PartitionSpecs for a params dict that may mix dense rest
+    leaves and (possibly stack-split) QuantizedParam wire leaves."""
+    out = {}
+    base = ("model", model.ms.fsdp_axes, None)
+    for name, v in params.items():
+        if isinstance(v, QuantizedParam):
+            out[name] = P(None, *base) if v.wire.ndim == 4 else P(*base)
+        else:
+            out[name] = model.specs[name].rest_pspec(model.ms)
+    return out
+
+
 class ServeEngine:
-    def __init__(self, model: Model, mesh, spec: DecodeSpec):
+    def __init__(self, model: Model, mesh, spec: DecodeSpec,
+                 params: Optional[dict] = None):
+        """`params` (optional) is only inspected for its leaf FORMS: pass it
+        when serving wire-form (QuantizedParam) leaves so the shard_map
+        pspecs match — see :func:`prepare_wire_params`."""
         self.model = model
         self.mesh = mesh
         self.spec = spec
         self.dm = DecodeModel(model, spec)
         ms = model.ms
         self.bax = ms.fsdp_axes if spec.batch_sharded else None
-        self._pspecs = model.param_pspecs()
+        self._pspecs = (wire_param_pspecs(model, params) if params is not None
+                        else model.param_pspecs())
         _, self.cache_pspecs = self.dm.cache_struct()
         self._decode = None
         self._prefill = None

@@ -20,6 +20,21 @@ core/qsdp.py).  Under ``QSDPConfig.prefetch`` the scan-over-layers inside
 in flight while layer i computes, in the forward and the rematerialized
 backward alike (``benchmarks/bench_step.py`` measures all three schedules).
 
+Quantized-domain train state (``quantized_state=True``)
+-------------------------------------------------------
+The paper's Theorem 2 maintains ONLY quantized weights.  The historical
+``quantize_master=True`` mode emulated that with f32 leaves round-tripped
+through quantize->dequantize each step; ``quantized_state=True`` makes the
+state itself quantized: every master-eligible parameter rests as a
+:class:`~repro.core.quant.QuantizedParam` (packed u8 wire codes +
+per-bucket affine, ~bits/32 of the f32 bytes).  Per step, each device
+dequantizes its shard locally, runs the identical schedule above, and
+re-quantizes the updated shard under the SAME per-step keys the QDQ master
+uses (``fold_in(key, 0x3A57E9)`` then ``_h(name)``) — so the loss/param
+trajectory is bit-exact with ``quantize_master=True`` started from the
+same (quantization-grid) initial state; see ``quantize_train_state`` /
+``dequantize_train_state``.
+
 Gradient semantics: `Model.loss_fn` returns the per-device local-batch mean
 with no collectives on the loss path; the engine's reduce-scatter backward
 divides by the FSDP size, so accumulated grads are exact global-batch means.
@@ -38,13 +53,19 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
-from ..core.quant import QuantConfig, quantize_dequantize
+from ..core.quant import (
+    QuantConfig,
+    QuantizedParam,
+    qparam_decode,
+    qparam_encode,
+    quantize_dequantize,
+)
 from ..models.transformer import Model
 from ..optim import Optimizer, OptState
 
 
 class TrainState(NamedTuple):
-    params: dict[str, jax.Array]
+    params: dict[str, Any]  # f32 rest-layout leaves and/or QuantizedParam
     opt: OptState
 
 
@@ -53,10 +74,76 @@ def init_train_state(model: Model, optimizer: Optimizer, key: jax.Array) -> Trai
     return TrainState(params=params, opt=optimizer.init(params))
 
 
-def state_pspecs(model: Model, optimizer_has_mu: bool = True, has_nu: bool = True):
-    pspec = model.param_pspecs()
-    mu = pspec if optimizer_has_mu else ()
-    nu = pspec if has_nu else ()
+# -- master quantization policy (shared by quantize_master / quantized_state) --
+
+_MASTER_SALT = 0x3A57E9
+
+
+def master_quant_config(model: Model, master_bits: int = 8) -> QuantConfig:
+    """The Q^w the master weights are re-quantized with (paper Theorem 2:
+    random-shift rounding at the engine's bucket granularity)."""
+    return QuantConfig(bits=master_bits, bucket_size=model.qcfg.bucket_size,
+                       mode="shift")
+
+
+def master_eligible(model: Model, name: str) -> bool:
+    """Params the master quantization applies to — the same filter the wire
+    quantization uses (norms / biases / tiny tensors stay full precision)."""
+    spec = model.specs[name]
+    return bool(
+        spec.quantize
+        and spec.n_logical_local(model.ms.model_size) >= model.qcfg.min_quant_size
+    )
+
+
+def quantize_train_state(state: TrainState, model: Model, key: jax.Array,
+                         master_bits: int = 8) -> TrainState:
+    """Convert an f32 TrainState into quantized-domain form: every
+    master-eligible param leaf becomes a :class:`QuantizedParam` holding its
+    packed wire codes, quantized under the same key schedule a train step
+    with this `key` would use.  Host-side helper (global rest arrays);
+    optimizer moments are left as the optimizer built them."""
+    qc = master_quant_config(model, master_bits)
+    mkey = jax.random.fold_in(key, _MASTER_SALT)
+    params = {}
+    for name, p in state.params.items():
+        if master_eligible(model, name) and not isinstance(p, QuantizedParam):
+            params[name] = qparam_encode(p, qc, jax.random.fold_in(mkey, _h(name)))
+        else:
+            params[name] = p
+    return TrainState(params=params, opt=state.opt)
+
+
+def dequantize_train_state(state: TrainState) -> TrainState:
+    """Decode every QuantizedParam leaf (params AND optimizer moments) back
+    to dense f32 rest layout.  Decoding is deterministic, so this yields
+    exactly the values a `quantize_master=True` QDQ step would have stored."""
+    def dec(leaf):
+        return qparam_decode(leaf) if isinstance(leaf, QuantizedParam) else leaf
+
+    params = {k: dec(v) for k, v in state.params.items()}
+    mu = state.opt.mu if state.opt.mu == () else {k: dec(v) for k, v in state.opt.mu.items()}
+    nu = state.opt.nu if state.opt.nu == () else {k: dec(v) for k, v in state.opt.nu.items()}
+    return TrainState(params=params, opt=OptState(step=state.opt.step, mu=mu, nu=nu))
+
+
+def state_pspecs(model: Model, optimizer_has_mu: bool = True, has_nu: bool = True,
+                 quantized_state: bool = False, quantized_moments: bool = False):
+    """PartitionSpec tree for a TrainState.  QuantizedParam leaves hold a
+    rank-3 (MODEL, FSDP, nbytes) wire array whatever the stack, so their
+    spec is always the flat wire spec (shard_map prefix-broadcasts the P
+    over the QuantizedParam subtree)."""
+    wire_p = P("model", model.ms.fsdp_axes, None)
+    pspec = {}
+    for name, spec in model.specs.items():
+        if quantized_state and master_eligible(model, name):
+            pspec[name] = wire_p
+        else:
+            pspec[name] = spec.rest_pspec(model.ms)
+    base = model.param_pspecs()
+    mom = {name: wire_p for name in base} if quantized_moments else base
+    mu = mom if optimizer_has_mu else ()
+    nu = mom if has_nu else ()
     return TrainState(
         params=pspec,
         opt=OptState(step=P(), mu=mu, nu=nu),
@@ -70,15 +157,27 @@ def build_train_step(
     grad_clip: float = 1.0,
     quantize_master: bool = False,
     master_bits: int = 8,
-    donate: bool = True,
+    quantized_state: bool = False,
 ):
-    """Returns (step_fn, in_specs, out_specs).  step_fn is per-device code
-    to be wrapped in shard_map by the caller (launch.train / dryrun)."""
+    """Returns the per-device step_fn to be wrapped in shard_map by the
+    caller (launch.train / dryrun).  Buffer donation is owned by that
+    caller's jit (see ``make_jitted_train_step``'s `donate`).
+
+    quantize_master:  f32 state, round-tripped through Q^w each step (QDQ).
+    quantized_state:  the state's master-eligible leaves ARE the wire codes
+                      (QuantizedParam): decode shard-locally at step entry,
+                      re-quantize at step exit under the same keys — bit-
+                      exact with the QDQ path (see module docstring).
+    """
     ms = model.ms
     all_axes = tuple(ms.axes)
 
     def step_fn(state: TrainState, batch: dict, key: jax.Array) -> tuple[TrainState, dict]:
-        params = state.params
+        if quantized_state:
+            params = {k: qparam_decode(v) if isinstance(v, QuantizedParam) else v
+                      for k, v in state.params.items()}
+        else:
+            params = state.params
 
         # ---- microbatch split along the batch axis of every batch leaf ----
         # (axis 0 for everything except the M-RoPE "positions" stream, whose
@@ -107,27 +206,27 @@ def build_train_step(
         loss = jnp.mean(losses)
 
         # ---- global-norm clip (elements are disjoint across the mesh) ----
+        sq = sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads))
+        gnorm = jnp.sqrt(lax.psum(sq, all_axes))
         if grad_clip:
-            sq = sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads))
-            gnorm = jnp.sqrt(lax.psum(sq, all_axes))
             scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
         else:
-            sq = sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads))
-            gnorm = jnp.sqrt(lax.psum(sq, all_axes))
             scale = jnp.ones(())
 
         new_params, new_opt = optimizer.update(params, grads, state.opt, grad_scale=scale)
 
-        # ---- optional theory-faithful master quantization (Theorem 2) ----
-        if quantize_master:
-            qc = QuantConfig(bits=master_bits, bucket_size=model.qcfg.bucket_size, mode="shift")
-            mkey = jax.random.fold_in(key, 0x3A57E9)
+        # ---- theory-faithful master quantization (Theorem 2) -------------
+        if quantize_master or quantized_state:
+            qc = master_quant_config(model, master_bits)
+            mkey = jax.random.fold_in(key, _MASTER_SALT)
 
             def qmaster(name, p):
-                spec = model.specs[name]
-                if not spec.quantize or spec.n_logical_local(ms.model_size) < model.qcfg.min_quant_size:
+                if not master_eligible(model, name):
                     return p
-                return quantize_dequantize(p, qc, jax.random.fold_in(mkey, _h(name))).astype(p.dtype)
+                pkey = jax.random.fold_in(mkey, _h(name))
+                if quantized_state:
+                    return qparam_encode(p, qc, pkey)
+                return quantize_dequantize(p, qc, pkey).astype(p.dtype)
 
             new_params = {k: qmaster(k, v) for k, v in new_params.items()}
 
@@ -150,10 +249,15 @@ def _h(s: str) -> int:
 
 def make_jitted_train_step(model: Model, optimizer: Optimizer, mesh, n_micro: int = 1,
                            batch_pspec: Optional[dict] = None, donate: bool = True,
-                           **kw):
+                           quantized_state: bool = False, **kw):
     """Convenience: shard_map + jit the per-device step over `mesh`."""
-    step = build_train_step(model, optimizer, n_micro=n_micro, **kw)
-    sspec = state_pspecs(model)
+    step = build_train_step(model, optimizer, n_micro=n_micro,
+                            quantized_state=quantized_state, **kw)
+    sspec = state_pspecs(
+        model,
+        quantized_state=quantized_state,
+        quantized_moments=getattr(optimizer, "quantized_moments", False),
+    )
     if batch_pspec is None:
         batch_pspec = {"tokens": P(model.ms.fsdp_axes), "labels": P(model.ms.fsdp_axes)}
     mapped = shard_map(

@@ -1,14 +1,32 @@
-"""Checkpoint save/load roundtrip on the trivial mesh."""
+"""Checkpoint format v1/v2 round-trips on the trivial mesh: quantized-state
+payloads, manifest validation, resume bit-exactness, and the quantized
+payload-size bound.  Cross-mesh resharding ((1,1) <-> (2,4)) runs under 8
+emulated devices in scripts/check_quantized_state.py (test_distributed.py)."""
+import json
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import configs
 from repro.core.qsdp import MeshSpec, QSDPConfig
+from repro.core.quant import QuantizedParam
 from repro.models.transformer import Model
 from repro.optim import AdamWConfig, make_adamw
 from repro.train import load_checkpoint, save_checkpoint
-from repro.train.step import init_train_state, state_pspecs
+from repro.train.checkpoint import checkpoint_payload_bytes
+from repro.train.step import (
+    dequantize_train_state,
+    init_train_state,
+    make_jitted_train_step,
+    master_eligible,
+    quantize_train_state,
+    state_pspecs,
+)
+
+from test_quantized_state import run_steps, tiny_batch, tiny_model
 
 
 def test_checkpoint_roundtrip(tmp_path, mesh11):
@@ -28,8 +46,188 @@ def test_checkpoint_roundtrip(tmp_path, mesh11):
                                       np.asarray(loaded.opt.mu[k]))
     assert int(loaded.opt.step) == int(state.opt.step)
 
-    import json, os
     with open(os.path.join(path, "manifest.json")) as f:
         man = json.load(f)
     assert man["meta"]["arch"] == cfg.name
-    assert man["format"].startswith("qsdp-ckpt")
+    assert man["format"] == "qsdp-ckpt-v2"
+    assert man["mesh"] == {"model_size": 1, "fsdp_size": 1}
+
+
+def test_checkpoint_v1_still_loads(tmp_path, mesh11):
+    model = tiny_model()
+    opt = make_adamw(AdamWConfig())
+    state = init_train_state(model, opt, jax.random.PRNGKey(0))
+    path = str(tmp_path / "ckpt_v1")
+    save_checkpoint(path, state, format_version=1)
+    with open(os.path.join(path, "manifest.json")) as f:
+        assert json.load(f)["format"] == "qsdp-ckpt-v1"
+    loaded = load_checkpoint(path, mesh11, state_pspecs(model))
+    for k in state.params:
+        np.testing.assert_array_equal(np.asarray(state.params[k]),
+                                      np.asarray(loaded.params[k]))
+
+
+def test_v1_refuses_quantized_state(tmp_path):
+    model = tiny_model()
+    opt = make_adamw(AdamWConfig())
+    state = quantize_train_state(
+        init_train_state(model, opt, jax.random.PRNGKey(0)),
+        model, jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="v1"):
+        save_checkpoint(str(tmp_path / "x"), state, format_version=1)
+
+
+def test_quantized_checkpoint_roundtrip_and_bytes(tmp_path, mesh11):
+    """v2 stores quantized leaves as their exact wire bytes; loading them
+    back is byte-identical, and the payload obeys the bits/32 bound of the
+    acceptance criterion."""
+    model = tiny_model()
+    opt = make_adamw(AdamWConfig(moment_bits=8))
+    state = quantize_train_state(
+        init_train_state(model, opt, jax.random.PRNGKey(0)),
+        model, jax.random.PRNGKey(1))
+    path = str(tmp_path / "qckpt")
+    save_checkpoint(path, state)
+    sp = state_pspecs(model, quantized_state=True, quantized_moments=True)
+    loaded = load_checkpoint(path, mesh11, sp)
+
+    f32_path = str(tmp_path / "fckpt")
+    save_checkpoint(f32_path, dequantize_train_state(state))
+    qbytes = checkpoint_payload_bytes(path)
+    fbytes = checkpoint_payload_bytes(f32_path)
+
+    for name, leaf in state.params.items():
+        l2 = loaded.params[name]
+        if isinstance(leaf, QuantizedParam):
+            assert isinstance(l2, QuantizedParam)
+            np.testing.assert_array_equal(np.asarray(leaf.wire), np.asarray(l2.wire))
+            assert l2.cell_shape == leaf.cell_shape and l2.cfg == leaf.cfg
+            # payload bound: bits/32 of the f32 payload + bucket metadata
+            cfg = leaf.cfg
+            n = leaf.n
+            nb = -(-n // cfg.bucket_size)
+            key = f"params/{name}"
+            bound = (fbytes[key] * cfg.bits / 32
+                     + 2 * cfg.meta_bytes * nb          # per-bucket (scale, zero)
+                     + cfg.bucket_size * cfg.bits / 8)  # tail-bucket padding
+            assert qbytes[key] <= bound, (name, qbytes[key], bound)
+        else:
+            np.testing.assert_array_equal(np.asarray(leaf), np.asarray(l2))
+    assert any(isinstance(v, QuantizedParam) for v in loaded.params.values())
+    assert all(isinstance(v, QuantizedParam) for v in loaded.opt.mu.values())
+    # whole-checkpoint win
+    assert sum(qbytes.values()) < 0.45 * sum(fbytes.values())
+
+
+def test_quantized_checkpoint_dequantize_load(tmp_path, mesh11):
+    """dequantize=True loads a quantized v2 checkpoint as exact f32 values."""
+    model = tiny_model()
+    opt = make_adamw(AdamWConfig())
+    state = quantize_train_state(
+        init_train_state(model, opt, jax.random.PRNGKey(0)),
+        model, jax.random.PRNGKey(1))
+    path = str(tmp_path / "qckpt")
+    save_checkpoint(path, state)
+    loaded = load_checkpoint(path, mesh11, state_pspecs(model), dequantize=True)
+    ref = dequantize_train_state(state)
+    for k in ref.params:
+        assert not isinstance(loaded.params[k], QuantizedParam)
+        np.testing.assert_array_equal(np.asarray(ref.params[k]),
+                                      np.asarray(loaded.params[k]), err_msg=k)
+
+
+def test_resume_bitexact(tmp_path, mesh11):
+    """train 5 -> save -> load -> train 5 more == train 10 straight, in the
+    quantized-state domain (wire bytes survive the checkpoint untouched)."""
+    model = tiny_model()
+    opt = make_adamw(AdamWConfig(lr=1e-3))
+    batch = tiny_batch()
+    qs0 = quantize_train_state(
+        init_train_state(model, opt, jax.random.PRNGKey(0)),
+        model, jax.random.PRNGKey(9))
+    step = make_jitted_train_step(model, opt, mesh11, quantized_state=True,
+                                  donate=False)
+    path = str(tmp_path / "resume")
+    with mesh11:
+        s5, l5 = run_steps(step, qs0, batch, 5)
+        save_checkpoint(path, s5)
+        sp = state_pspecs(model, quantized_state=True)
+        s5b = load_checkpoint(path, mesh11, sp)
+        s10_resumed, l10b = run_steps(step, s5b, batch, 5, start=5)
+        s10_straight, _ = run_steps(step, s5, batch, 5, start=5)
+    dq_a = dequantize_train_state(s10_resumed)
+    dq_b = dequantize_train_state(s10_straight)
+    for k in dq_a.params:
+        np.testing.assert_array_equal(np.asarray(dq_a.params[k]),
+                                      np.asarray(dq_b.params[k]), err_msg=k)
+    for k in dq_a.opt.mu:
+        np.testing.assert_array_equal(np.asarray(dq_a.opt.mu[k]),
+                                      np.asarray(dq_b.opt.mu[k]), err_msg=k)
+    assert int(dq_a.opt.step) == int(dq_b.opt.step) == 10
+
+
+# ---------------------------------------------------------------------------
+# manifest validation: corrupted / unknown manifests fail loudly
+# ---------------------------------------------------------------------------
+
+
+def _saved_tiny(tmp_path):
+    model = tiny_model()
+    opt = make_adamw(AdamWConfig())
+    state = init_train_state(model, opt, jax.random.PRNGKey(0))
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, state)
+    return model, path
+
+
+def _edit_manifest(path, fn):
+    mp = os.path.join(path, "manifest.json")
+    with open(mp) as f:
+        man = json.load(f)
+    fn(man)
+    with open(mp, "w") as f:
+        json.dump(man, f)
+
+
+def test_unknown_format_fails(tmp_path, mesh11):
+    model, path = _saved_tiny(tmp_path)
+    _edit_manifest(path, lambda m: m.update(format="qsdp-ckpt-v9"))
+    with pytest.raises(ValueError, match="unknown checkpoint format"):
+        load_checkpoint(path, mesh11, state_pspecs(model))
+
+
+def test_missing_format_fails(tmp_path, mesh11):
+    model, path = _saved_tiny(tmp_path)
+    _edit_manifest(path, lambda m: m.pop("format"))
+    with pytest.raises(ValueError, match="unknown checkpoint format"):
+        load_checkpoint(path, mesh11, state_pspecs(model))
+
+
+def test_mismatched_leaf_shape_fails(tmp_path, mesh11):
+    model, path = _saved_tiny(tmp_path)
+
+    def corrupt(m):
+        k = next(iter(m["leaves"]))
+        m["leaves"][k]["shape"] = [1, 2, 3]
+
+    _edit_manifest(path, corrupt)
+    with pytest.raises(ValueError, match="corrupted checkpoint manifest"):
+        load_checkpoint(path, mesh11, state_pspecs(model))
+
+
+def test_missing_leaf_entry_fails(tmp_path, mesh11):
+    model, path = _saved_tiny(tmp_path)
+
+    def drop(m):
+        m["leaves"].pop(next(iter(m["leaves"])))
+
+    _edit_manifest(path, drop)
+    with pytest.raises(ValueError, match="leaf set mismatch"):
+        load_checkpoint(path, mesh11, state_pspecs(model))
+
+
+def test_missing_manifest_fails(tmp_path, mesh11):
+    model, path = _saved_tiny(tmp_path)
+    os.remove(os.path.join(path, "manifest.json"))
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(path, mesh11, state_pspecs(model))

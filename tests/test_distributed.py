@@ -11,6 +11,10 @@ subprocesses with XLA_FLAGS=--xla_force_host_platform_device_count=8:
     vs. the per-tensor collectives (all bits/modes/backends, hierarchical,
     bf16 metadata, engine + prefetch pipeline) and the HLO regression that
     a coalesced layer gather is exactly ONE u8 all-gather launch.
+  * scripts/check_quantized_state.py — quantized-domain train state on the
+    (2,4) mesh: 10-step bit-exactness vs the f32 QDQ master path, and
+    checkpoint-v2 save-on-one-mesh/load-on-another resharding
+    ((1,1) <-> (2,4), f32 and quantized states).
 """
 import os
 import subprocess
@@ -42,6 +46,14 @@ def test_distributed_numerics():
 @pytest.mark.slow
 def test_coalesced_wire_format():
     r = _run("check_coalesced.py")
+    assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-4000:]
+    assert "ALL-OK" in r.stdout
+    assert "FAIL " not in r.stdout
+
+
+@pytest.mark.slow
+def test_quantized_state_distributed():
+    r = _run("check_quantized_state.py")
     assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-4000:]
     assert "ALL-OK" in r.stdout
     assert "FAIL " not in r.stdout

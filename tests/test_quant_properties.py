@@ -1,0 +1,236 @@
+"""Property-based tests for the whole quant stack: quantize -> pack ->
+unpack -> dequantize round-trip invariants over bits 2-8 x all 3 rounding
+modes x odd shapes / bucket remainders / non-divisible tails, plus the
+wire_pack/wire_unpack byte-length formulas and the QuantizedParam
+(quantized-domain train state) encode/decode layer on top.
+
+Runs with real `hypothesis` when installed, or with the deterministic
+seeded-sweep stub in tests/_hypothesis_stub.py (installed by conftest.py)
+in hermetic environments — only `integers` / `sampled_from` strategies are
+used so both back ends accept every test.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.quant import (
+    QuantConfig,
+    QuantizedParam,
+    dequantize,
+    fp_pack,
+    fp_unpack,
+    pack_codes,
+    qparam_decode,
+    qparam_encode,
+    qparam_split_stack,
+    quantize,
+    quantize_dequantize,
+    quantized_shapes,
+    unpack_codes,
+    wire_bytes,
+    wire_pack,
+    wire_segment_bytes,
+    wire_unpack,
+)
+
+MODES = ("shift", "stochastic", "nearest")
+
+
+def _key(*ints):
+    k = jax.random.PRNGKey(ints[0])
+    for i in ints[1:]:
+        k = jax.random.fold_in(k, i)
+    return k
+
+
+def _data(n, seed, scale=3.0):
+    return jax.random.normal(_key(seed), (n,)) * scale
+
+
+# ---------------------------------------------------------------------------
+# quantize -> dequantize: shape/dtype restoration + per-bucket error bound
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(bits=st.integers(2, 8), mode=st.sampled_from(MODES),
+       n=st.integers(1, 4000), bucket=st.sampled_from([64, 96, 128, 1024]),
+       seed=st.integers(0, 2**16))
+def test_roundtrip_error_bound(bits, mode, n, bucket, seed):
+    cfg = QuantConfig(bits=bits, bucket_size=bucket, mode=mode)
+    x = _data(n, seed)
+    q = quantize(x, cfg, _key(seed, 1))
+    y = dequantize(q)
+    assert y.shape == x.shape and y.dtype == x.dtype
+    # each bucket's decode error is bounded by one step of its grid
+    pad = (-n) % bucket
+    xb = jnp.pad(x, (0, pad)).reshape(-1, bucket)
+    yb = jnp.pad(y, (0, pad)).reshape(-1, bucket)
+    err = jnp.max(jnp.abs(xb - yb), axis=1)
+    bound = q.scale * (1 + 1e-5) + 1e-7
+    assert bool(jnp.all(err <= bound)), (float(jnp.max(err - bound)), bits, mode)
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.integers(2, 8), mode=st.sampled_from(MODES),
+       d0=st.integers(1, 7), d1=st.integers(1, 11), d2=st.integers(1, 13),
+       seed=st.integers(0, 2**16))
+def test_roundtrip_odd_shapes(bits, mode, d0, d1, d2, seed):
+    """Odd multi-dim shapes with non-divisible tails restore exactly."""
+    cfg = QuantConfig(bits=bits, bucket_size=64, mode=mode)
+    x = _data(d0 * d1 * d2, seed).reshape(d0, d1, d2)
+    y = quantize_dequantize(x, cfg, _key(seed, 2))
+    assert y.shape == x.shape and y.dtype == x.dtype
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+# ---------------------------------------------------------------------------
+# code packing: exact inverses + byte-length formulas
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(bits=st.integers(1, 8), n_codes=st.integers(1, 64), seed=st.integers(0, 2**16))
+def test_pack_unpack_codes_inverse(bits, n_codes, seed):
+    k = 8 // bits if 8 % bits == 0 else 1
+    n = n_codes * k  # pack requires a whole number of bytes
+    codes = jax.random.randint(_key(seed), (n,), 0, (1 << bits)).astype(jnp.uint8)
+    packed = pack_codes(codes, bits)
+    assert packed.shape[-1] == n // k
+    assert bool(jnp.all(unpack_codes(packed, bits) == codes))
+
+
+@settings(max_examples=60, deadline=None)
+@given(bits=st.integers(2, 8), n=st.integers(1, 5000),
+       bucket=st.sampled_from([64, 128, 1024]),
+       meta=st.sampled_from(["float32", "bfloat16"]))
+def test_wire_byte_length_formulas(bits, n, bucket, meta):
+    cfg = QuantConfig(bits=bits, bucket_size=bucket, meta_dtype=meta)
+    nb = -(-n // bucket)
+    s = quantized_shapes(n, cfg)
+    assert s["scale"] == (nb,) and s["zero"] == (nb,)
+    assert s["codes"] == (nb, bucket // cfg.codes_per_byte)
+    expect = nb * (bucket // cfg.codes_per_byte) + 2 * cfg.meta_bytes * nb
+    assert wire_bytes(n, cfg) == wire_segment_bytes(n, cfg) == expect
+    # packed widths: 1/2/4/8-bit codes occupy exactly bits/8 bytes each,
+    # others one byte per value
+    if 8 % bits == 0:
+        assert s["codes"][1] * 8 == bucket * bits
+
+
+@settings(max_examples=50, deadline=None)
+@given(bits=st.integers(2, 8), mode=st.sampled_from(MODES),
+       n=st.integers(1, 4000), seed=st.integers(0, 2**16))
+def test_wire_pack_unpack_bitexact(bits, mode, n, seed):
+    """wire_pack -> wire_unpack reproduces codes/scale/zero bit-for-bit and
+    the buffer length matches the static formula."""
+    cfg = QuantConfig(bits=bits, bucket_size=128, mode=mode)
+    x = _data(n, seed)
+    q = quantize(x, cfg, _key(seed, 3))
+    buf = wire_pack(q)
+    assert buf.dtype == jnp.uint8
+    assert buf.shape == (wire_segment_bytes(n, cfg),)
+    q2 = wire_unpack(buf, n, cfg, shape=q.shape)
+    assert bool(jnp.all(q2.codes == q.codes))
+    assert bool(jnp.all(q2.scale == q.scale))
+    assert bool(jnp.all(q2.zero == q.zero))
+    assert bool(jnp.all(dequantize(q2) == dequantize(q)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 2000), seed=st.integers(0, 2**16),
+       dt=st.sampled_from(["float32", "bfloat16", "float16"]))
+def test_fp_pack_unpack_roundtrip(n, seed, dt):
+    x = _data(n, seed).astype(getattr(jnp, dt)).astype(jnp.float32)
+    buf = fp_pack(x, dt)
+    assert buf.shape == (n * jnp.dtype(getattr(jnp, dt)).itemsize,)
+    assert bool(jnp.all(fp_unpack(buf, n, dt) == x))
+
+
+# ---------------------------------------------------------------------------
+# QuantizedParam: the quantized-domain train-state layer
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.integers(2, 8), mode=st.sampled_from(MODES),
+       stack=st.integers(1, 4), n_local=st.integers(1, 700),
+       seed=st.integers(0, 2**16))
+def test_qparam_matches_qdq_master(bits, mode, stack, n_local, seed):
+    """Decoding a QuantizedParam is bit-identical to the f32 QDQ master
+    path applied to the same rest-layout leaf with the same key — the
+    invariant the quantized-domain train state rests on."""
+    cfg = QuantConfig(bits=bits, bucket_size=256, mode=mode)
+    x = _data(stack * n_local, seed).reshape(stack, 1, 1, n_local)
+    key = _key(seed, 4)
+    qp = qparam_encode(x, cfg, key)
+    assert qp.wire.shape == (1, 1, wire_segment_bytes(stack * n_local, cfg))
+    dec = qparam_decode(qp)
+    ref = quantize_dequantize(x, cfg, key)
+    assert dec.shape == x.shape
+    assert bool(jnp.all(dec == ref))
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.integers(2, 8), model=st.integers(1, 3), fsdp=st.integers(1, 3),
+       n_local=st.integers(1, 300), seed=st.integers(0, 2**16))
+def test_qparam_multicell_matches_per_cell(bits, model, fsdp, n_local, seed):
+    """Host-side (vmapped, multi-cell) encode/decode agrees bit-for-bit with
+    the per-device single-cell path for every (model, fsdp) cell."""
+    cfg = QuantConfig(bits=bits, bucket_size=128, mode="shift")
+    x = _data(model * fsdp * n_local, seed).reshape(model, fsdp, n_local)
+    key = _key(seed, 5)
+    dec = qparam_decode(qparam_encode(x, cfg, key))
+    for m in range(model):
+        for f in range(fsdp):
+            cell = x[m:m + 1, f:f + 1, :]
+            ref = qparam_decode(qparam_encode(cell, cfg, key))
+            assert bool(jnp.all(dec[m:m + 1, f:f + 1, :] == ref)), (m, f)
+
+
+@settings(max_examples=20, deadline=None)
+@given(stack=st.integers(1, 5), nb_s=st.integers(1, 4), seed=st.integers(0, 2**16))
+def test_qparam_split_stack_exact(stack, nb_s, seed):
+    """Per-layer wire slices of a bucket-aligned stack decode to exactly
+    the corresponding slices of the full decode (the serve scan layout)."""
+    bucket = 64
+    n_local = nb_s * bucket
+    cfg = QuantConfig(bits=8, bucket_size=bucket, mode="shift")
+    x = _data(stack * n_local, seed).reshape(stack, 1, 1, n_local)
+    qp = qparam_encode(x, cfg, _key(seed, 6))
+    sp = qparam_split_stack(qp)
+    assert sp.wire.shape == (stack, 1, 1, wire_segment_bytes(n_local, cfg))
+    assert sp.cell_shape == (n_local,)
+    full = qparam_decode(qp)
+    assert bool(jnp.all(qparam_decode(sp) == full))
+    # each slice is a self-contained wire segment
+    for s in range(stack):
+        one = QuantizedParam(sp.wire[s], (n_local,), cfg)
+        assert bool(jnp.all(qparam_decode(one)[0, 0] == full[s, 0, 0]))
+
+
+def test_qparam_rejects_bad_rank():
+    cfg = QuantConfig(bits=8, bucket_size=64)
+    with pytest.raises(ValueError):
+        qparam_encode(jnp.zeros((4, 4)), cfg, _key(0))
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.sampled_from([2, 4, 8]), n_local=st.integers(1, 1000),
+       seed=st.integers(0, 2**16))
+def test_qparam_compression_ratio(bits, n_local, seed):
+    """The wire holds <= bits/32 of the f32 bytes + per-bucket metadata —
+    the memory-win bound the checkpoint-v2 tests also assert."""
+    cfg = QuantConfig(bits=bits, bucket_size=1024)
+    x = _data(n_local, seed).reshape(1, 1, n_local)
+    qp = qparam_encode(x, cfg, _key(seed, 7))
+    nb = -(-n_local // cfg.bucket_size)
+    f32_bytes = 4 * n_local
+    meta_overhead = 2 * cfg.meta_bytes * nb
+    # bits/8 bytes per value (padded up to a whole bucket) + metadata
+    assert qp.wire.nbytes <= (n_local + cfg.bucket_size) * bits / 8 + meta_overhead
+    if n_local >= cfg.bucket_size:  # amortized: the acceptance-criterion bound
+        assert qp.wire.nbytes <= f32_bytes * bits / 32 + meta_overhead + cfg.bucket_size

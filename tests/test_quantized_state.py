@@ -1,0 +1,205 @@
+"""Quantized-domain train state: bit-exactness vs the f32 QDQ master path,
+quantized Adam moments, grad-clip metric semantics, and state-bytes
+accounting — all on the trivial (1,1) mesh (the (2,4) mesh runs the same
+checks in scripts/check_quantized_state.py via test_distributed.py)."""
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.qsdp import MeshSpec, QSDPConfig
+from repro.core.quant import QuantizedParam
+from repro.models.config import ModelConfig
+from repro.models.transformer import Model
+from repro.optim import AdamWConfig, make_adamw
+from repro.train.step import (
+    build_train_step,
+    dequantize_train_state,
+    init_train_state,
+    make_jitted_train_step,
+    master_eligible,
+    quantize_train_state,
+    state_pspecs,
+)
+
+
+def tiny_model(ms=None, **qkw):
+    ms = ms or MeshSpec(axes=("data", "model"), shape=(1, 1))
+    cfg = ModelConfig(name="tiny", arch_type="dense", n_layers=2, d_model=64,
+                      vocab_size=128, n_heads=4, n_kv_heads=2, head_dim=16,
+                      d_ff=128)
+    qkw.setdefault("min_quant_size", 256)
+    return Model(cfg, ms, QSDPConfig(**qkw))
+
+
+def tiny_batch(b=4, s=32, vocab=128, seed=3):
+    tokens = jax.random.randint(jax.random.PRNGKey(seed), (b, s), 0, vocab)
+    return {"tokens": tokens, "labels": tokens}
+
+
+def run_steps(step, state, batch, n, start=0, seed=7):
+    losses = []
+    for i in range(start, start + n):
+        state, m = step(state, batch, jax.random.fold_in(jax.random.PRNGKey(seed), i))
+        losses.append(float(m["loss"]))
+    return state, losses
+
+
+@pytest.fixture(scope="module")
+def qdq_vs_qstate(mesh11):
+    """Run 10 steps of the f32 QDQ master path and of the quantized-domain
+    state path from the same (grid-representable) initial state."""
+    model = tiny_model()
+    opt = make_adamw(AdamWConfig(lr=1e-3))
+    s0 = init_train_state(model, opt, jax.random.PRNGKey(0))
+    qs0 = quantize_train_state(s0, model, jax.random.PRNGKey(9))
+    fs0 = dequantize_train_state(qs0)
+
+    batch = tiny_batch()
+    step_q = make_jitted_train_step(model, opt, mesh11, quantized_state=True,
+                                    donate=False)
+    step_f = make_jitted_train_step(model, opt, mesh11, quantize_master=True,
+                                    donate=False)
+    with mesh11:
+        sq, lq = run_steps(step_q, qs0, batch, 10)
+        sf, lf = run_steps(step_f, fs0, batch, 10)
+    return model, sq, lq, sf, lf
+
+
+def test_quantized_state_bitexact_loss(qdq_vs_qstate):
+    _, _, lq, _, lf = qdq_vs_qstate
+    assert lq == lf  # float-exact, all 10 steps
+
+
+def test_quantized_state_bitexact_params_and_moments(qdq_vs_qstate):
+    model, sq, _, sf, _ = qdq_vs_qstate
+    dq = dequantize_train_state(sq)
+    for k in sf.params:
+        np.testing.assert_array_equal(np.asarray(dq.params[k]),
+                                      np.asarray(sf.params[k]), err_msg=k)
+    for k in sf.opt.mu:
+        np.testing.assert_array_equal(np.asarray(dq.opt.mu[k]),
+                                      np.asarray(sf.opt.mu[k]), err_msg=k)
+        np.testing.assert_array_equal(np.asarray(dq.opt.nu[k]),
+                                      np.asarray(sf.opt.nu[k]), err_msg=k)
+
+
+def test_quantized_state_leaf_forms(qdq_vs_qstate):
+    """Eligible leaves rest as QuantizedParam wire codes; filtered leaves
+    (norms, small tensors) stay f32 — and the wire is ~bits/32 the size."""
+    model, sq, _, _, _ = qdq_vs_qstate
+    n_wire = 0
+    for name, leaf in sq.params.items():
+        if master_eligible(model, name):
+            assert isinstance(leaf, QuantizedParam), name
+            assert leaf.wire.dtype == jnp.uint8
+            spec = model.specs[name]
+            f32_bytes = int(np.prod(spec.rest_shape(model.ms))) * 4
+            assert leaf.wire.nbytes < 0.3 * f32_bytes, name  # 8-bit + meta
+            n_wire += 1
+        else:
+            assert not isinstance(leaf, QuantizedParam), name
+    assert n_wire > 0
+
+
+def test_quantized_moments_run_and_compress(mesh11):
+    model = tiny_model()
+    opt = make_adamw(AdamWConfig(lr=1e-3, moment_bits=8, moment_bucket_size=256))
+    assert opt.quantized_moments
+    state = init_train_state(model, opt, jax.random.PRNGKey(0))
+    for tree in (state.opt.mu, state.opt.nu):
+        for k, v in tree.items():
+            assert isinstance(v, QuantizedParam), k
+            # freshly-initialized moments are exact zeros after decode
+            from repro.core.quant import qparam_decode
+            assert bool(jnp.all(qparam_decode(v) == 0.0)), k
+    step = make_jitted_train_step(model, opt, mesh11, donate=False)
+    with mesh11:
+        state, losses = run_steps(step, state, tiny_batch(), 3)
+    assert all(np.isfinite(losses))
+    # moments stayed in wire form through the update
+    assert all(isinstance(v, QuantizedParam) for v in state.opt.mu.values())
+    f32_bytes = sum(int(np.prod(s.rest_shape(model.ms))) * 4
+                    for s in model.specs.values())
+    mu_bytes = sum(v.wire.nbytes for v in state.opt.mu.values())
+    assert mu_bytes < 0.3 * f32_bytes
+
+
+def test_quantized_moments_track_f32_moments(mesh11):
+    """8-bit moments follow the f32-moment trajectory closely over a few
+    steps (they are a lossy, documented approximation — not bit-exact)."""
+    model = tiny_model()
+    batch = tiny_batch()
+    states = {}
+    for bits in (None, 8):
+        opt = make_adamw(AdamWConfig(lr=1e-3, moment_bits=bits))
+        state = init_train_state(model, opt, jax.random.PRNGKey(0))
+        step = make_jitted_train_step(model, opt, mesh11, donate=False)
+        with mesh11:
+            states[bits], losses = run_steps(step, state, batch, 3)
+        assert all(np.isfinite(losses))
+    # lossy by design: early-training nu is tiny, so 8-bit moment error is
+    # amplified through 1/sqrt(nu) — bound the drift at a few lr-sized steps
+    for k in states[None].params:
+        a = np.asarray(states[None].params[k])
+        b = np.asarray(states[8].params[k])
+        np.testing.assert_allclose(a, b, atol=5e-2, err_msg=k)
+
+
+def test_grad_clip_zero_same_gnorm_scale_one(mesh11):
+    """grad_clip=0 must report the SAME grad_norm metric as a clipped run
+    (the norm is computed once, in one arm) and apply scale == 1 — i.e. the
+    same update as an effectively-unbinding clip threshold."""
+    model = tiny_model()
+    opt = make_adamw(AdamWConfig(lr=1e-3))
+    batch = tiny_batch()
+    results = {}
+    for clip in (0.0, 1.0, 1e9):
+        state = init_train_state(model, opt, jax.random.PRNGKey(0))
+        step = make_jitted_train_step(model, opt, mesh11, grad_clip=clip,
+                                      donate=False)
+        with mesh11:
+            state, m = step(state, batch, jax.random.PRNGKey(7))
+        results[clip] = (state, float(m["grad_norm"]), float(m["loss"]))
+    # same grad_norm metric whether or not clipping is enabled
+    assert results[0.0][1] == results[1.0][1] == results[1e9][1]
+    assert results[0.0][2] == results[1.0][2]
+    # scale == 1: grad_clip=0 takes the identical step as a huge threshold
+    s0, shuge = results[0.0][0], results[1e9][0]
+    for k in s0.params:
+        np.testing.assert_array_equal(np.asarray(s0.params[k]),
+                                      np.asarray(shuge.params[k]), err_msg=k)
+
+
+def test_build_train_step_donate_removed():
+    """The dead `donate` parameter is gone from build_train_step (donation
+    is owned by make_jitted_train_step's jit)."""
+    sig = inspect.signature(build_train_step)
+    assert "donate" not in sig.parameters
+    assert "donate" in inspect.signature(make_jitted_train_step).parameters
+
+
+def test_make_jitted_donate_false_keeps_input_state(mesh11):
+    model = tiny_model()
+    opt = make_adamw(AdamWConfig(lr=1e-3))
+    state = init_train_state(model, opt, jax.random.PRNGKey(0))
+    step = make_jitted_train_step(model, opt, mesh11, donate=False)
+    with mesh11:
+        step(state, tiny_batch(), jax.random.PRNGKey(1))
+    # input buffers not donated: still readable
+    _ = [np.asarray(v) for v in state.params.values()]
+
+
+def test_state_pspecs_quantized_forms():
+    model = tiny_model()
+    sp = state_pspecs(model, quantized_state=True, quantized_moments=True)
+    from jax.sharding import PartitionSpec as P
+    wire = P("model", model.ms.fsdp_axes, None)
+    for name in model.specs:
+        if master_eligible(model, name):
+            assert sp.params[name] == wire, name
+        else:
+            assert sp.params[name] == model.specs[name].rest_pspec(model.ms), name
+    assert all(v == wire for v in sp.opt.mu.values())
