@@ -1,6 +1,8 @@
 """Serve a model with batched requests: prefill a batch of prompts, decode
 greedily, report per-step token throughput and the quantized weight-gather
-bytes each decode step ships.
+bytes each decode step ships.  Engine setup is the shared
+repro.serve.build_serve_setup — the launcher, this example, and
+benchmarks/bench_serve.py all build the exact same stack.
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python examples/serve_batched.py --arch olmoe-1b-7b
@@ -10,14 +12,10 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from repro import configs
-from repro.core.qsdp import MeshSpec, QSDPConfig, step_comm_bytes
+from repro.core.qsdp import QSDPConfig
 from repro.data import SyntheticLM
-from repro.models.decode import DecodeSpec
-from repro.models.transformer import Model
-from repro.serve import ServeEngine
+from repro.serve import build_serve_setup, make_prompt_batch
 
 
 def main():
@@ -30,44 +28,24 @@ def main():
     args = ap.parse_args()
 
     dp, tp = (2, 4) if len(jax.devices()) >= 8 else (1, 1)
-    mesh = jax.make_mesh((dp, tp), ("data", "model"))
-    ms = MeshSpec(axes=("data", "model"), shape=(dp, tp))
-    cfg = configs.get_smoke(args.arch)
-    qsdp = QSDPConfig.baseline() if args.baseline else QSDPConfig(min_quant_size=1024)
-    model = Model(cfg, ms, qsdp)
-    params = model.init_params(jax.random.PRNGKey(0))
+    qsdp = (QSDPConfig.baseline() if args.baseline
+            else QSDPConfig(min_quant_size=1024))
+    setup = build_serve_setup(args.arch, data_par=dp, model_par=tp, smoke=True,
+                              qsdp=qsdp, batch=args.batch,
+                              prompt_len=args.prompt_len, gen=args.gen)
+    cfg, eng, params = setup.cfg, setup.engine, setup.params
 
     # per-decode-step wire bytes: ONE quantized gather per parameter
-    comm = step_comm_bytes(model.engine, gathers_per_param=1, reduces_per_param=0)
     print(f"# {cfg.name} ({'baseline' if args.baseline else 'QSDP W8'}): "
-          f"decode-step weight gathers = {comm['weight_gather']/2**20:.2f} MiB/device")
-
-    ring = args.prompt_len + args.gen
-    ring += (-ring) % tp
-    spec = DecodeSpec(cache_len=0 if cfg.arch_type == "ssm" else ring,
-                      batch_global=args.batch,
-                      batch_sharded=args.batch % ms.fsdp_size == 0,
-                      enc_len=max(args.prompt_len // cfg.enc_frames_ratio, tp)
-                      if cfg.arch_type == "audio" else 0)
-    eng = ServeEngine(model, mesh, spec)
+          f"decode-step weight gathers = "
+          f"{setup.decode_gather_bytes() / 2**20:.2f} MiB/device")
 
     data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.prompt_len,
                        global_batch=args.batch)
     tokens, _ = data.sample(0)
-    bax = ms.fsdp_axes if spec.batch_sharded else None
-    prompt, pspecs = {"tokens": tokens}, {"tokens": P(bax)}
-    if cfg.arch_type == "vlm":
-        b, s = tokens.shape
-        prompt.update(vision_embeds=jnp.zeros((b, s, cfg.d_model), jnp.bfloat16),
-                      vision_mask=jnp.zeros((b, s), bool),
-                      positions=jnp.broadcast_to(jnp.arange(s), (3, b, s)))
-        pspecs.update(vision_embeds=P(bax), vision_mask=P(bax), positions=P(None, bax))
-    if cfg.arch_type == "audio":
-        prompt["audio_embeds"] = 0.1 * jax.random.normal(
-            jax.random.PRNGKey(1), (args.batch, spec.enc_len, cfg.d_model), jnp.bfloat16)
-        pspecs["audio_embeds"] = P(bax)
+    prompt, pspecs = make_prompt_batch(cfg, setup.spec, setup.ms, tokens)
 
-    with mesh:
+    with setup.mesh:
         t0 = time.time()
         out = eng.generate(params, prompt, pspecs, n_tokens=args.gen)
         out.block_until_ready()
@@ -78,9 +56,8 @@ def main():
         nxt = out[:, -1]
         t1 = time.time()
         for i in range(8):
-            nxt, cache = dec(params, cache, nxt,
-                             jnp.asarray(args.prompt_len + i, jnp.int32),
-                             jax.random.PRNGKey(i))
+            pos = jnp.full((args.batch,), args.prompt_len + i, jnp.int32)
+            nxt, cache = dec(params, cache, nxt, pos, jax.random.PRNGKey(i))
         nxt.block_until_ready()
         rate = 8 * args.batch / (time.time() - t1)
     print(f"generated {args.batch}x{args.gen} tokens in {t_total:.2f}s "

@@ -5,7 +5,7 @@ allocation.  This is what the multi-pod dry-run lowers against.
 Shape kinds:
   train    -> train_step inputs  (tokens, labels [, modality stubs])
   prefill  -> prefill_fn inputs  (tokens [, modality stubs])
-  decode   -> decode_fn inputs   (cache, tokens (B,), pos)
+  decode   -> decode_fn inputs   (cache, tokens (B,), pos (B,) per-slot)
 
 Modality stubs (the one allowed carve-out):
   vlm   -> vision_embeds (B, S, d) bf16 patch embeddings + vision_mask +
@@ -79,5 +79,7 @@ def input_specs(model: Model, shape: ShapeConfig):
     dm = DecodeModel(model, dspec)
     cache_structs, cache_specs = dm.cache_struct()
     tok = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
-    pos = jax.ShapeDtypeStruct((), jnp.int32)
-    return "decode", (cache_structs, tok, pos, key_struct), (cache_specs, P(bax), P(), P())
+    # per-slot positions: every batch slot decodes at its own sequence
+    # position (continuous batching)
+    pos = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    return "decode", (cache_structs, tok, pos, key_struct), (cache_specs, P(bax), P(bax), P())

@@ -1,8 +1,17 @@
-"""Serving launcher: batched greedy generation with QSDP weight gathers.
+"""Serving launcher: batched generation with QSDP weight gathers.
 
-  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-  PYTHONPATH=src python -m repro.launch.serve --arch gpt-125m --smoke \
+One-shot batch mode (prefill one batch, decode to completion):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  PYTHONPATH=src python -m repro.launch.serve --arch gpt-125m --smoke \\
       --batch 8 --prompt-len 32 --gen 16 --data-par 2 --model-par 4
+
+Continuous-batching mode (--continuous): a request queue drained through
+serve.ContinuousScheduler — a fixed pool of --batch decode slots, requests
+admitted into freed slots mid-decode, per-request sampling:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gpt-125m --smoke \\
+      --continuous --batch 4 --requests 16 --gen 16 --temperature 0.8 --top-k 40
 """
 from __future__ import annotations
 
@@ -10,22 +19,21 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+import numpy as np
 
-from .. import configs
-from ..core.qsdp import MeshSpec, QSDPConfig
+from ..core.qsdp import QSDPConfig
 from ..data import SyntheticLM
-from ..models.decode import DecodeSpec
-from ..models.transformer import Model
-from ..serve import ServeEngine
+from ..serve import (ContinuousScheduler, Request, build_serve_setup,
+                     make_prompt_batch, scheduler_batch_builder)
 
 
-def main(argv=None):
+def parse_args(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt-125m")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="batch size (one-shot) / decode-slot pool size "
+                         "(--continuous)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--data-par", type=int, default=1)
@@ -33,52 +41,82 @@ def main(argv=None):
     ap.add_argument("--baseline", action="store_true")
     ap.add_argument("--wbits", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    # continuous-batching flags
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve a request queue through the "
+                         "continuous-batching scheduler")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="--continuous: number of queued requests")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="--continuous: per-request sampling temperature "
+                         "(0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="--continuous: per-request top-k (0 = full vocab)")
+    return ap.parse_args(argv)
 
-    mesh = jax.make_mesh((args.data_par, args.model_par), ("data", "model"))
-    ms = MeshSpec(axes=("data", "model"), shape=(args.data_par, args.model_par))
-    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
-    qsdp = QSDPConfig.baseline() if args.baseline else QSDPConfig(weight_bits=args.wbits)
-    model = Model(cfg, ms, qsdp)
-    params = model.init_params(jax.random.PRNGKey(args.seed))
 
-    ring = args.prompt_len + args.gen
-    ring += (-ring) % args.model_par
-    spec = DecodeSpec(
-        cache_len=0 if cfg.arch_type == "ssm" else ring,
-        batch_global=args.batch,
-        batch_sharded=args.batch % ms.fsdp_size == 0,
-        enc_len=max(args.prompt_len // cfg.enc_frames_ratio, args.model_par)
-        if cfg.arch_type == "audio" else 0,
-    )
-    eng = ServeEngine(model, mesh, spec)
+def run_continuous(setup, args) -> int:
+    rng = np.random.default_rng(args.seed)
+    sched = ContinuousScheduler(
+        setup.model, setup.mesh, setup.spec, setup.params,
+        gather_key=jax.random.PRNGKey(args.seed),
+        batch_builder=scheduler_batch_builder(setup.cfg, setup.spec, setup.ms))
+    # mixed prompt/gen lengths, seeded: realistic heavy-traffic shape
+    for i in range(args.requests):
+        plen = int(rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1))
+        gen = int(rng.integers(max(args.gen // 2, 1), args.gen + 1))
+        sched.submit(Request(
+            rid=f"req{i}", prompt=rng.integers(0, setup.cfg.vocab_size,
+                                               size=plen).tolist(),
+            max_new_tokens=gen, temperature=args.temperature,
+            top_k=args.top_k, seed=args.seed + i))
+    t0 = time.time()
+    done = sched.run()
+    dt = time.time() - t0
+    st = sched.stats()
+    lat = [c.finish_step - c.submit_step for c in done.values()]
+    print(f"# {setup.cfg.name} continuous: {len(done)} requests, "
+          f"{st['tokens_generated']} tokens in {dt:.2f}s "
+          f"({st['tokens_generated'] / dt:.1f} tok/s incl. compile), "
+          f"occupancy {st['mean_occupancy']:.2f}/{st['slots']}, "
+          f"latency p50={np.percentile(lat, 50):.0f} "
+          f"p95={np.percentile(lat, 95):.0f} steps")
+    print(f"# decode-step weight gathers = "
+          f"{setup.decode_gather_bytes() / 2**20:.2f} MiB/device")
+    first = done[sorted(done)[0]]
+    print("sample:", first.tokens.tolist())
+    return 0
 
-    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.prompt_len,
+
+def run_batch(setup, args) -> int:
+    data = SyntheticLM(vocab_size=setup.cfg.vocab_size, seq_len=args.prompt_len,
                        global_batch=args.batch, seed=args.seed)
     tokens, _ = data.sample(0)
-    bax = ms.fsdp_axes if spec.batch_sharded else None
-    prompt = {"tokens": tokens}
-    pspecs = {"tokens": P(bax)}
-    if cfg.arch_type == "vlm":
-        b, s = tokens.shape
-        prompt["vision_embeds"] = jnp.zeros((b, s, cfg.d_model), jnp.bfloat16)
-        prompt["vision_mask"] = jnp.zeros((b, s), bool)
-        prompt["positions"] = jnp.broadcast_to(jnp.arange(s), (3, b, s))
-        pspecs.update(vision_embeds=P(bax), vision_mask=P(bax), positions=P(None, bax))
-    if cfg.arch_type == "audio":
-        prompt["audio_embeds"] = 0.1 * jax.random.normal(
-            jax.random.PRNGKey(1), (args.batch, spec.enc_len, cfg.d_model), jnp.bfloat16)
-        pspecs["audio_embeds"] = P(bax)
-
+    prompt, pspecs = make_prompt_batch(setup.cfg, setup.spec, setup.ms, tokens)
     t0 = time.time()
-    with mesh:
-        out = eng.generate(params, prompt, pspecs, n_tokens=args.gen)
+    with setup.mesh:
+        out = setup.engine.generate(setup.params, prompt, pspecs,
+                                    n_tokens=args.gen)
     out.block_until_ready()
     dt = time.time() - t0
-    print(f"# {cfg.name} generated {args.batch}x{args.gen} tokens in {dt:.2f}s "
+    print(f"# {setup.cfg.name} generated {args.batch}x{args.gen} tokens in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s incl. compile)")
     print("sample:", out[0].tolist())
     return 0
+
+
+def main(argv=None):
+    args = parse_args(argv)
+    qsdp = (QSDPConfig.baseline() if args.baseline
+            else QSDPConfig(weight_bits=args.wbits))
+    setup = build_serve_setup(
+        args.arch, data_par=args.data_par, model_par=args.model_par,
+        smoke=args.smoke, qsdp=qsdp, batch=args.batch,
+        prompt_len=args.prompt_len, gen=args.gen, seed=args.seed,
+        sampling=args.continuous and (args.temperature > 0 or args.top_k > 1))
+    if args.continuous:
+        return run_continuous(setup, args)
+    return run_batch(setup, args)
 
 
 if __name__ == "__main__":

@@ -269,7 +269,11 @@ def cross_attention(
 
 def decode_new_kv(x: jax.Array, w: dict, cfg: AttnConfig, cos, sin):
     """Project this token's q (all padded heads, gathered) and full-head
-    k1/v1 on every rank.  Returns (q_all (B,Hp,hd), k1, v1 (B,n_kv,hd))."""
+    k1/v1 on every rank.  Returns (q_all (B,Hp,hd), k1, v1 (B,n_kv,hd)).
+
+    cos/sin may be (hd//2,) — one shared position — or (B, hd//2) per-slot
+    rotations (continuous batching, where every batch slot sits at its own
+    sequence position)."""
     b, _ = x.shape
     hd = cfg.head_dim
     q = (x @ w["wq"]) if "bq" not in w else (x @ w["wq"] + w["bq"].astype(x.dtype))
@@ -278,8 +282,10 @@ def decode_new_kv(x: jax.Array, w: dict, cfg: AttnConfig, cos, sin):
     v1 = (x @ w["wv"]) if "bv" not in w else (x @ w["wv"] + w["bv"].astype(x.dtype))
     k1 = k1.reshape(b, cfg.kv_local, hd)
     v1 = v1.reshape(b, cfg.kv_local, hd)
-    q = apply_rope(q[:, None], cos[None], sin[None])[:, 0]
-    k1 = apply_rope(k1[:, None], cos[None], sin[None])[:, 0]
+    cb = cos[None] if cos.ndim == 1 else cos[:, None]
+    sb = sin[None] if sin.ndim == 1 else sin[:, None]
+    q = apply_rope(q[:, None], cb, sb)[:, 0]
+    k1 = apply_rope(k1[:, None], cb, sb)[:, 0]
     q_all = lax.all_gather(q, MODEL_AXIS, axis=1, tiled=True)  # (B, Hp, hd)
     if cfg.kv_mode == "tp":
         k1 = lax.all_gather(k1, MODEL_AXIS, axis=1, tiled=True)
@@ -288,7 +294,10 @@ def decode_new_kv(x: jax.Array, w: dict, cfg: AttnConfig, cos, sin):
 
 
 def ring_slot(pos: jax.Array, window: int, s_loc: int):
-    """Ring-buffer addressing: (local slot index, is_mine flag)."""
+    """Ring-buffer addressing: (local slot index, is_mine flag).
+
+    Elementwise, so ``pos`` may be a scalar (whole batch at one position)
+    or a (B,) vector of per-slot positions (continuous batching)."""
     rank = lax.axis_index(MODEL_AXIS)
     slot = jnp.mod(pos, window)
     owner = slot // s_loc
@@ -328,25 +337,32 @@ def decode_attend(
     n_kv > n_heads) and the score/AV einsums batch over the kv-head axis
     directly against the un-expanded cache — this removed a group-x
     cache-sized copy per layer (§Perf P2-2).  bf16 operands, f32
-    accumulation.  Returns (B, Hp, hd) f32 (padded heads zero)."""
+    accumulation.  Returns (B, Hp, hd) f32 (padded heads zero).
+
+    ``pos`` may be a scalar (one shared position) or a (B,) vector of
+    per-slot positions (continuous batching) — slot validity is computed
+    per batch element either way."""
     b, hp, hd = q_all.shape
     s_loc = k_cache.shape[1]
     rank = lax.axis_index(MODEL_AXIS)
     qr, k_cache, v_cache = _kv_major_q(q_all, k_cache, v_cache, cfg)
 
     # slot validity: slot s (global) holds position p_s = pos - ((pos-s) mod W)
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (b,))
     s_glob = rank * s_loc + jnp.arange(s_loc)
-    p_s = pos - jnp.mod(pos - s_glob, window)
-    valid = p_s >= 0  # (S_loc,)
+    p_s = pos[:, None] - jnp.mod(pos[:, None] - s_glob[None, :], window)
+    valid = p_s >= 0  # (B, S_loc)
 
     scale = 1.0 / math.sqrt(hd)
     s_ij = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache.astype(qr.dtype),
                       preferred_element_type=jnp.float32) * scale
-    s_ij = jnp.where(valid[None, None, None, :], s_ij, -jnp.inf)
+    s_ij = jnp.where(valid[:, None, None, :], s_ij, -jnp.inf)
     m = lax.pmax(jnp.max(s_ij, axis=-1), MODEL_AXIS)  # (B, K, G)
     m_safe = jnp.where(jnp.isinf(m), 0.0, m)
     p = jnp.exp(s_ij - m_safe[..., None])
-    p = jnp.where(valid[None, None, None, :], p, 0.0)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
     l = lax.psum(jnp.sum(p, axis=-1), MODEL_AXIS)
     o = lax.psum(
         jnp.einsum("bkgs,bskd->bkgd", p.astype(q_all.dtype),

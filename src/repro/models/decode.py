@@ -68,6 +68,12 @@ class DecodeSpec:
     # matrix (per-weight fallback when the wire layout doesn't tile rows —
     # see QSDPEngine.rowquant_eligible).
     rowquant_mlp: bool = False
+    # Per-slot sampling: decode/prefill take a `sample` tree of per-slot
+    # (temperature, top_k, PRNG key) arrays and sample the next token with
+    # layers.sample_vocab_parallel instead of the pure greedy argmax.  Rows
+    # with temp <= 0 or top_k == 1 still take the greedy path bit-exactly,
+    # so a sampling engine at temp 0 matches a greedy engine token-for-token.
+    sampling: bool = False
 
     def batch_pspec(self, ms) -> tuple:
         return (ms.fsdp_axes,) if self.batch_sharded else (None,)
@@ -181,10 +187,21 @@ class DecodeModel:
     # ------------------------------------------------------------------
 
     def decode_fn(self, params: Params, cache: Cache, tokens: jax.Array,
-                  pos: jax.Array, key: jax.Array) -> tuple[jax.Array, Cache]:
-        """tokens (B_loc,) int32 current input; pos () int32 its position.
-        Returns (next_tokens (B_loc,), new_cache)."""
+                  pos: jax.Array, key: jax.Array,
+                  sample: Optional[dict] = None) -> tuple[jax.Array, Cache]:
+        """tokens (B_loc,) int32 current input; pos () or (B_loc,) int32 its
+        position — a vector gives every batch slot its own sequence position
+        (continuous batching).  Returns (next_tokens (B_loc,), new_cache).
+
+        sample (present iff ``spec.sampling``): per-slot sampling state —
+        {"temp": (B_loc,) f32, "top_k": (B_loc,) i32, "key": (B_loc, 2) u32}.
+        The per-token sampling key is fold_in(slot key, pos + 1) — a pure
+        function of the REQUEST's own key and position, so sampled output
+        is reproducible across runs and across batch compositions."""
         m, cfg = self.m, self.m.cfg
+        pos = jnp.asarray(pos, jnp.int32)
+        if pos.ndim == 0:
+            pos = jnp.broadcast_to(pos, tokens.shape)
         emb = m.engine.gather("embed", params["embed"], key)
         x = L.embed_vocab_parallel(tokens[:, None], emb)[:, 0]  # (B, d)
 
@@ -209,36 +226,49 @@ class DecodeModel:
         x = L.rms_norm(x, fn, cfg.norm_eps)
         head = emb if cfg.tie_embeddings else m.engine.gather("lm_head", params["lm_head"], key)
         logits = L.vocab_parallel_logits(x, head)
-        nxt = L.greedy_sample_vocab_parallel(logits, head.shape[0])
+        nxt = self._sample(logits, head.shape[0], sample, pos + 1)
         return nxt.astype(jnp.int32), cache
 
+    def _sample(self, logits, v_local, sample, n_consumed):
+        """Next-token selection: greedy argmax, or per-slot sampling keyed by
+        fold_in(request key, tokens consumed so far) when `sample` is given.
+        n_consumed (B,) is the model-visible prefix length, i.e. the global
+        position of the token being produced — identical for a request
+        whether it runs solo or interleaved, which is what pins sampled
+        streams across batch compositions."""
+        if sample is None:
+            return L.greedy_sample_vocab_parallel(logits, v_local)
+        skeys = jax.vmap(jax.random.fold_in)(sample["key"], n_consumed)
+        return L.sample_vocab_parallel(logits, v_local, sample["temp"],
+                                       sample["top_k"], skeys)
+
     def _decode_rope(self, pos):
+        """pos () or (B,) -> cos/sin broadcastable for decode_new_kv
+        ((hd//2,) shared, or (B, hd//2) per-slot)."""
         cfg = self.m.cfg
         if not cfg.has_attention:
             return None, None
         if cfg.rope_mode == "mrope":
-            pos3 = jnp.broadcast_to(pos, (3,))
+            pos3 = jnp.broadcast_to(pos, (3,) + jnp.shape(pos))
             return L.mrope_cos_sin(pos3, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections)
         return L.rope_cos_sin(pos, cfg.head_dim, cfg.rope_theta)
 
     def _write_token_kv(self, kc_all, vc_all, layer, k1, v1, pos):
         """Write this token's KV into the scan-carried stacked cache
-        (L, B, S_loc, n_kv, hd) at (layer, :, ring slot) — in-place DUS of
-        one token column (~KB) instead of re-emitting the whole cache as
-        scan ys (which cost 3 full-cache rewrites per step — §Perf P2-1)."""
+        (L, B, S_loc, n_kv, hd) at (layer, b, ring slot of pos[b]) — a
+        token-sized gather + scatter per layer (~KB) instead of re-emitting
+        the whole cache as scan ys (§Perf P2-1).  pos is (B,): each batch
+        slot writes its OWN ring slot, so interleaved requests at different
+        positions never touch each other's cache lines."""
         b = k1.shape[0]
-        n_kv, hd = kc_all.shape[-2], kc_all.shape[-1]
         s_loc = kc_all.shape[2]
         idx, is_mine = attn_mod.ring_slot(pos, self.spec.cache_len, s_loc)
-        mine = is_mine.astype(kc_all.dtype)
-        old_k = lax.dynamic_slice(kc_all, (layer, 0, idx, 0, 0),
-                                  (1, b, 1, n_kv, hd))
-        old_v = lax.dynamic_slice(vc_all, (layer, 0, idx, 0, 0),
-                                  (1, b, 1, n_kv, hd))
-        new_k = mine * k1[None, :, None].astype(kc_all.dtype) + (1 - mine) * old_k
-        new_v = mine * v1[None, :, None].astype(vc_all.dtype) + (1 - mine) * old_v
-        kc_all = lax.dynamic_update_slice(kc_all, new_k, (layer, 0, idx, 0, 0))
-        vc_all = lax.dynamic_update_slice(vc_all, new_v, (layer, 0, idx, 0, 0))
+        bi = jnp.arange(b)
+        mine = is_mine[:, None, None]
+        new_k = jnp.where(mine, k1.astype(kc_all.dtype), kc_all[layer, bi, idx])
+        new_v = jnp.where(mine, v1.astype(vc_all.dtype), vc_all[layer, bi, idx])
+        kc_all = kc_all.at[layer, bi, idx].set(new_k)
+        vc_all = vc_all.at[layer, bi, idx].set(new_v)
         return kc_all, vc_all
 
     def _decode_attn_layer(self, x, w, kc_all, vc_all, layer, pos, cos, sin, mlp):
@@ -442,10 +472,13 @@ class DecodeModel:
     # Prefill (build caches from a full prompt)
     # ------------------------------------------------------------------
 
-    def prefill_fn(self, params: Params, batch: dict, key: jax.Array
-                   ) -> tuple[jax.Array, Cache]:
+    def prefill_fn(self, params: Params, batch: dict, key: jax.Array,
+                   sample: Optional[dict] = None) -> tuple[jax.Array, Cache]:
         """batch: same leaves as training minus labels.  Returns
-        (next_tokens (B_loc,) from the last position, cache)."""
+        (next_tokens (B_loc,) from the last position, cache).
+
+        sample: optional per-slot sampling state (see decode_fn); the first
+        generated token is keyed by fold_in(slot key, prompt length)."""
         m, cfg = self.m, self.m.cfg
         tokens = batch["tokens"]
         b, s = tokens.shape
@@ -477,7 +510,8 @@ class DecodeModel:
         h = L.rms_norm(x[:, -1], fn, cfg.norm_eps)
         head = emb if cfg.tie_embeddings else m.engine.gather("lm_head", params["lm_head"], key)
         logits = L.vocab_parallel_logits(h, head)
-        nxt = L.greedy_sample_vocab_parallel(logits, head.shape[0])
+        nxt = self._sample(logits, head.shape[0], sample,
+                           jnp.full((b,), s, jnp.int32))
         return nxt.astype(jnp.int32), cache
 
     def _slice_seq(self, kv: jax.Array) -> jax.Array:

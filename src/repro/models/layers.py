@@ -192,6 +192,45 @@ def greedy_sample_vocab_parallel(logits_local: jax.Array, v_local: int) -> jax.A
     return lax.pmin(cand, "model")
 
 
+def sample_vocab_parallel(
+    logits_local: jax.Array,  # (T, V_local) f32 local logit shard
+    v_local: int,
+    temp: jax.Array,  # (T,) f32 per-row temperature; <= 0 -> greedy
+    top_k: jax.Array,  # (T,) int32 per-row top-k; <= 0 -> full vocab, 1 -> greedy
+    key: jax.Array,  # (T, 2) uint32 per-row PRNG keys
+) -> jax.Array:
+    """Per-row temperature / top-k sampling over model-sharded vocab logits.
+
+    Rows with ``temp <= 0`` or ``top_k == 1`` take the greedy argmax path
+    BIT-EXACTLY (same reduction as :func:`greedy_sample_vocab_parallel`), so
+    a greedy request under a sampling engine matches a pure-greedy engine.
+    Sampling uses the Gumbel-max trick seeded per row, so a row's token
+    depends only on its own (logits, temp, top_k, key) — never on what else
+    is in the batch — which is what makes continuous-batching runs
+    reproducible and slot-isolated.
+
+    The full-vocab logits are re-assembled with one all-gather over the
+    model axis; every rank then draws the SAME per-row Gumbel noise and
+    takes the same argmax, so the result is model-replicated like the
+    greedy path.
+    """
+    greedy = greedy_sample_vocab_parallel(logits_local, v_local)
+    full = lax.all_gather(logits_local, "model", axis=1, tiled=True)  # (T, V)
+
+    def row(lg, t, k, kk):
+        v = lg.shape[0]
+        # top-k mask: keep logits >= the k-th largest (dynamic per-row k)
+        kth = jnp.take(jnp.sort(lg), v - jnp.clip(k, 1, v))
+        keep = (k <= 0) | (lg >= kth)
+        z = lg / jnp.maximum(t, 1e-6) + jax.random.gumbel(kk, (v,), jnp.float32)
+        z = jnp.where(keep, z, -jnp.inf)
+        return jnp.argmax(z).astype(jnp.int32)
+
+    sampled = jax.vmap(row)(full, temp, top_k, key)
+    use_greedy = (temp <= 0.0) | (top_k == 1)
+    return jnp.where(use_greedy, greedy, sampled)
+
+
 # ---------------------------------------------------------------------------
 # MLPs
 # ---------------------------------------------------------------------------

@@ -1,1 +1,7 @@
-from .engine import ServeEngine  # noqa: F401
+from .common import (ServeSetup, build_serve_setup, decode_cache_len,  # noqa: F401
+                     make_prompt_batch, make_serve_spec,
+                     scheduler_batch_builder)
+from .engine import (ServeEngine, greedy_sample_params,  # noqa: F401
+                     make_sample_params)
+from .scheduler import (CompletedRequest, ContinuousScheduler, Request,  # noqa: F401
+                        TokenEvent)

@@ -74,6 +74,24 @@ def wire_param_pspecs(model: Model, params: dict) -> dict:
     return out
 
 
+def make_sample_params(temperature: float = 0.0, top_k: int = 0,
+                       seed: int = 0, b: int = 1) -> dict:
+    """The `sample` tree consumed by DecodeModel.decode_fn/prefill_fn when
+    ``DecodeSpec.sampling`` — ONE request's sampling state broadcast over b
+    slots.  This is the only place that owns its shape contract."""
+    return {
+        "temp": jnp.full((b,), temperature, jnp.float32),
+        "top_k": jnp.full((b,), top_k, jnp.int32),
+        "key": jnp.broadcast_to(jax.random.PRNGKey(seed), (b, 2)),
+    }
+
+
+def greedy_sample_params(b: int) -> dict:
+    """Per-slot sampling state that reduces every row to the greedy path
+    bit-exactly (temp 0)."""
+    return make_sample_params(b=b)
+
+
 class ServeEngine:
     def __init__(self, model: Model, mesh, spec: DecodeSpec,
                  params: Optional[dict] = None):
@@ -94,11 +112,24 @@ class ServeEngine:
 
     # -- jitted steps ---------------------------------------------------------
 
+    def sample_pspecs(self) -> dict:
+        """PartitionSpecs for the per-slot `sample` tree (batch-axis arrays)."""
+        return {"temp": P(self.bax), "top_k": P(self.bax), "key": P(self.bax)}
+
     def decode_step(self):
+        """jit'd decode: (params, cache, tokens (B,), pos (B,), key
+        [, sample]) -> (next_tokens, cache).  pos is PER-SLOT — every batch
+        slot advances at its own sequence position, which is what lets the
+        continuous-batching scheduler interleave requests mid-decode.  The
+        trailing `sample` arg exists iff ``spec.sampling``."""
         if self._decode is None:
+            in_specs = [self._pspecs, self.cache_pspecs, P(self.bax),
+                        P(self.bax), P()]
+            if self.spec.sampling:
+                in_specs.append(self.sample_pspecs())
             fn = shard_map(
                 self.dm.decode_fn, mesh=self.mesh,
-                in_specs=(self._pspecs, self.cache_pspecs, P(self.bax), P(), P()),
+                in_specs=tuple(in_specs),
                 out_specs=(P(self.bax), self.cache_pspecs),
                 check_vma=False,
             )
@@ -107,9 +138,12 @@ class ServeEngine:
 
     def prefill_step(self, batch_pspecs: dict):
         if self._prefill is None:
+            in_specs = [self._pspecs, batch_pspecs, P()]
+            if self.spec.sampling:
+                in_specs.append(self.sample_pspecs())
             fn = shard_map(
                 self.dm.prefill_fn, mesh=self.mesh,
-                in_specs=(self._pspecs, batch_pspecs, P()),
+                in_specs=tuple(in_specs),
                 out_specs=(P(self.bax), self.cache_pspecs),
                 check_vma=False,
             )
@@ -126,15 +160,34 @@ class ServeEngine:
         }
 
     def generate(self, params, prompt_batch: dict, batch_pspecs: dict,
-                 n_tokens: int, key: Optional[jax.Array] = None):
-        """Greedy generation: prefill the prompt then decode n_tokens."""
+                 n_tokens: int, key: Optional[jax.Array] = None,
+                 sample: Optional[dict] = None, fold_step_keys: bool = True):
+        """Prefill the prompt then decode n_tokens (greedy unless a `sample`
+        tree is given on a ``spec.sampling`` engine).
+
+        fold_step_keys=False reuses ONE gather key for prefill and every
+        decode step, i.e. serves a FIXED quantized model: with the paper's
+        stochastic-shift weight quantizer the dequantized weights depend on
+        the step key, and a fixed key is what makes a request's tokens
+        bit-identical between this solo path and the continuous-batching
+        scheduler (which interleaves requests at different step indices, so
+        no per-step key schedule could line up)."""
         key = key if key is not None else jax.random.PRNGKey(0)
-        s = prompt_batch["tokens"].shape[1]
-        nxt, cache = self.prefill_step(batch_pspecs)(params, prompt_batch, key)
+        b, s = prompt_batch["tokens"].shape
+        if sample is not None and not self.spec.sampling:
+            raise ValueError(
+                "generate() got a sample tree but this engine was built with "
+                "DecodeSpec(sampling=False)")
+        if self.spec.sampling and sample is None:
+            sample = greedy_sample_params(b)
+        extra = (sample,) if self.spec.sampling else ()
+        nxt, cache = self.prefill_step(batch_pspecs)(
+            params, prompt_batch, key, *extra)
         out = [nxt]
         dec = self.decode_step()
         for i in range(n_tokens - 1):
-            pos = jnp.asarray(s + i, jnp.int32)
-            nxt, cache = dec(params, cache, nxt, pos, jax.random.fold_in(key, i))
+            pos = jnp.full((b,), s + i, jnp.int32)
+            k = jax.random.fold_in(key, i) if fold_step_keys else key
+            nxt, cache = dec(params, cache, nxt, pos, k, *extra)
             out.append(nxt)
         return jnp.stack(out, axis=1)  # (B, n_tokens)

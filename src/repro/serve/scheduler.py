@@ -1,0 +1,304 @@
+"""Continuous-batching request scheduler over the jit-compiled ServeEngine.
+
+The scheduler owns a fixed pool of ``B = spec.batch_global`` decode slots.
+Queued requests are admitted into freed slots MID-DECODE: admission runs a
+batch-of-1 prefill that writes the prompt's KV (the slot's entire ring /
+state, so nothing stale survives from the previous occupant) and the
+resulting single-slot cache is spliced into the pool cache with a
+token-addressed ``dynamic_update_slice`` along the batch axis — live slots
+are never touched.  Every decode step then advances ALL slots at their own
+per-slot positions (``DecodeModel.decode_fn`` with ``pos: (B,)``), streams
+each slot's token back to its request, retires slots on EOS / length, and
+refills them from the queue.
+
+Invariants this module is built around (enforced by
+tests/test_serve_scheduler.py and scripts/check_serve_sched.py):
+
+* **Slot isolation** — with greedy decoding, a request's output tokens are
+  bit-identical whether it runs alone in a batch-of-1 engine
+  (``ServeEngine.generate(..., fold_step_keys=False)``) or interleaved with
+  arbitrary other requests here.  Nothing a slot computes reads another
+  slot's cache, position, or sampling state.
+* **Fixed served model** — the paper's stochastic-shift weight quantizer
+  makes the dequantized weights a function of the gather key, so the
+  scheduler uses ONE ``gather_key`` for every prefill and decode step.
+  Interleaved requests sit at different global step indices; any per-step
+  key schedule would decode them against different weights than a solo run.
+* **Reproducible sampling** — per-request sampling streams are keyed by
+  ``fold_in(PRNGKey(request.seed), position)``, a pure function of the
+  request itself, so temperature/top-k outputs are identical across runs
+  and across batch compositions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from functools import partial
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from ..models.decode import DecodeSpec
+from ..models.transformer import Model
+from .engine import ServeEngine, make_sample_params
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request.
+
+    temperature <= 0 (or top_k == 1) decodes greedily — bit-exact with the
+    pure-greedy engine path.  top_k <= 0 means no top-k restriction.
+    """
+    rid: str
+    prompt: Sequence[int]
+    max_new_tokens: int
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+    eos_id: Optional[int] = None
+
+    @property
+    def needs_sampling(self) -> bool:
+        return self.temperature > 0.0 and self.top_k != 1
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """One streamed token: request `rid` produced its `index`-th token."""
+    rid: str
+    token: int
+    index: int
+    done: bool
+
+
+@dataclasses.dataclass
+class CompletedRequest:
+    rid: str
+    tokens: np.ndarray  # (n_generated,) int32, includes the EOS if hit
+    submit_step: int  # scheduler decode-step count at submit()
+    admit_step: int  # ... when the prompt was prefilled into a slot
+    finish_step: int  # ... when the last token was produced
+    submit_time: float
+    finish_time: float
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    n_out: int  # tokens generated so far (incl. the prefill token)
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _splice_slot(pool: dict, one: dict, slot: jax.Array) -> dict:
+    """Write a batch-of-1 prefill cache into pool slot `slot` (batch axis 1
+    on every cache leaf).  A dynamic_update_slice touches ONLY that slot's
+    lane, so live slots keep decoding over unchanged bytes."""
+    return {
+        k: lax.dynamic_update_slice_in_dim(v, one[k].astype(v.dtype), slot, axis=1)
+        for k, v in pool.items()
+    }
+
+
+class ContinuousScheduler:
+    """Fixed-slot continuous batching over one model / parameter set.
+
+    Parameters
+    ----------
+    model, mesh, spec, params:
+        as for :class:`ServeEngine`; ``spec.batch_global`` is the slot-pool
+        size B.  Set ``spec.sampling=True`` to serve temperature/top-k
+        requests (greedy requests still take the bit-exact greedy path).
+    gather_key:
+        the ONE weight-gather key used for every prefill and decode step
+        (see module docstring).  Defaults to PRNGKey(0).
+    batch_builder:
+        ``tokens (1, s) -> (batch dict, batch pspecs)`` for architectures
+        whose prefill needs modality stubs (vlm/audio); defaults to a
+        tokens-only batch.
+    """
+
+    def __init__(self, model: Model, mesh, spec: DecodeSpec, params: dict,
+                 gather_key: Optional[jax.Array] = None,
+                 batch_builder: Optional[Callable] = None):
+        self.model = model
+        self.mesh = mesh
+        self.spec = spec
+        self.params = params
+        self.B = spec.batch_global
+        self.gather_key = (gather_key if gather_key is not None
+                           else jax.random.PRNGKey(0))
+        self.batch_builder = batch_builder or self._default_batch
+        self.engine = ServeEngine(model, mesh, spec, params=params)
+        # batch-of-1 prefill engine: prompts prefill at their exact length
+        # (one retrace per distinct length), into the same ring layout
+        self._pf_spec = dataclasses.replace(spec, batch_global=1,
+                                            batch_sharded=False)
+        self.prefill_engine = ServeEngine(model, mesh, self._pf_spec,
+                                          params=params)
+
+        self.cache = self.engine.init_cache()
+        self.queue: deque[Request] = deque()
+        self.slots: list[Optional[_Slot]] = [None] * self.B
+        # per-slot device-step state (host mirrors; assembled each step)
+        self.tok = np.zeros(self.B, np.int32)
+        self.pos = np.zeros(self.B, np.int32)
+        self.temp = np.zeros(self.B, np.float32)
+        self.top_k = np.zeros(self.B, np.int32)
+        self.keys = np.zeros((self.B, 2), np.uint32)
+        self._submit_meta: dict[str, tuple[int, float]] = {}
+        self._admit_step: dict[str, int] = {}
+        self._out: dict[str, list[int]] = {}
+        self.finished: dict[str, CompletedRequest] = {}
+        # stats
+        self.step_count = 0
+        self.prefill_count = 0
+        self.occupancy_sum = 0
+        self.tokens_generated = 0
+
+    # -- request intake ------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if req.rid in self._out or req.rid in self.finished:
+            raise ValueError(f"duplicate request id {req.rid!r}")
+        if req.needs_sampling and not self.spec.sampling:
+            raise ValueError(
+                f"request {req.rid!r} needs sampling but the engine was built "
+                "with DecodeSpec(sampling=False)")
+        if len(req.prompt) < 1:
+            raise ValueError(f"request {req.rid!r}: prompt must be non-empty")
+        if self.spec.cache_len and len(req.prompt) > self.spec.cache_len:
+            raise ValueError(
+                f"request {req.rid!r}: prompt ({len(req.prompt)}) exceeds the "
+                f"KV ring ({self.spec.cache_len})")
+        if req.max_new_tokens < 1:
+            raise ValueError(f"request {req.rid!r}: max_new_tokens must be >= 1")
+        self._submit_meta[req.rid] = (self.step_count, time.perf_counter())
+        self._out[req.rid] = []
+        self.queue.append(req)
+
+    # -- internals -----------------------------------------------------------
+
+    @staticmethod
+    def _default_batch(tokens: np.ndarray):
+        return {"tokens": jnp.asarray(tokens)}, {"tokens": P(None)}
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def _emit(self, events: list, slot_i: int, token: int) -> None:
+        """Record one generated token for the slot's request; retire the
+        slot when the request is done."""
+        st = self.slots[slot_i]
+        req = st.req
+        self._out[req.rid].append(token)
+        st.n_out += 1
+        self.tokens_generated += 1
+        done = (st.n_out >= req.max_new_tokens
+                or (req.eos_id is not None and token == req.eos_id))
+        events.append(TokenEvent(req.rid, token, st.n_out - 1, done))
+        if done:
+            submit_step, submit_time = self._submit_meta.pop(req.rid)
+            self.finished[req.rid] = CompletedRequest(
+                rid=req.rid,
+                tokens=np.asarray(self._out.pop(req.rid), np.int32),
+                submit_step=submit_step,
+                admit_step=self._admit_step.pop(req.rid),
+                finish_step=self.step_count,
+                submit_time=submit_time,
+                finish_time=time.perf_counter(),
+            )
+            self.slots[slot_i] = None
+            self.temp[slot_i] = 0.0
+            self.top_k[slot_i] = 0
+        else:
+            self.tok[slot_i] = token
+
+    def _admit(self, events: list) -> None:
+        """Prefill queued requests into free slots (batch-of-1 prefill, then
+        splice the slot cache lane in place)."""
+        for slot_i in self._free_slots():
+            if not self.queue:
+                return
+            req = self.queue.popleft()
+            s = len(req.prompt)
+            tokens = np.asarray(req.prompt, np.int32)[None, :]
+            batch, pspecs = self.batch_builder(tokens)
+            key_data = np.asarray(jax.random.PRNGKey(req.seed), np.uint32)
+            extra = ()
+            if self.spec.sampling:
+                extra = (make_sample_params(req.temperature, req.top_k,
+                                            req.seed),)
+            nxt1, cache1 = self.prefill_engine.prefill_step(pspecs)(
+                self.params, batch, self.gather_key, *extra)
+            self.prefill_count += 1
+            self.cache = _splice_slot(self.cache, cache1,
+                                      jnp.asarray(slot_i, jnp.int32))
+            self.slots[slot_i] = _Slot(req=req, n_out=0)
+            self._admit_step[req.rid] = self.step_count
+            # slot decode state: the prefill token is fed at position s
+            self.pos[slot_i] = s
+            self.temp[slot_i] = req.temperature
+            self.top_k[slot_i] = req.top_k
+            self.keys[slot_i] = key_data
+            self._emit(events, slot_i, int(jax.device_get(nxt1)[0]))
+
+    # -- the scheduler loop --------------------------------------------------
+
+    def step(self) -> list[TokenEvent]:
+        """Admit pending requests into free slots, then run ONE pooled decode
+        step.  Returns the tokens streamed this step (admission may also
+        stream each admitted request's first, prefill-produced token)."""
+        events: list[TokenEvent] = []
+        self._admit(events)
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return events
+        extra = ()
+        if self.spec.sampling:
+            extra = ({"temp": jnp.asarray(self.temp),
+                      "top_k": jnp.asarray(self.top_k),
+                      "key": jnp.asarray(self.keys)},)
+        nxt, self.cache = self.engine.decode_step()(
+            self.params, self.cache, jnp.asarray(self.tok),
+            jnp.asarray(self.pos), self.gather_key, *extra)
+        nxt = np.asarray(jax.device_get(nxt))
+        self.step_count += 1
+        self.occupancy_sum += len(active)
+        for slot_i in active:
+            self.pos[slot_i] += 1
+            self._emit(events, slot_i, int(nxt[slot_i]))
+        return events
+
+    def run(self, max_steps: Optional[int] = None,
+            on_token: Optional[Callable[[TokenEvent], None]] = None
+            ) -> dict[str, CompletedRequest]:
+        """Drain the queue: step until every submitted request finished (or
+        max_steps decode steps ran).  Returns {rid: CompletedRequest}."""
+        steps = 0
+        while self.queue or self.n_active():
+            if max_steps is not None and steps >= max_steps:
+                break
+            for ev in self.step():
+                if on_token is not None:
+                    on_token(ev)
+            steps += 1
+        return self.finished
+
+    def stats(self) -> dict:
+        return {
+            "decode_steps": self.step_count,
+            "prefills": self.prefill_count,
+            "tokens_generated": self.tokens_generated,
+            "slots": self.B,
+            "mean_occupancy": (self.occupancy_sum / self.step_count
+                               if self.step_count else 0.0),
+        }

@@ -15,6 +15,13 @@ subprocesses with XLA_FLAGS=--xla_force_host_platform_device_count=8:
     (2,4) mesh: 10-step bit-exactness vs the f32 QDQ master path, and
     checkpoint-v2 save-on-one-mesh/load-on-another resharding
     ((1,1) <-> (2,4), f32 and quantized states).
+  * scripts/check_serve_sched.py — continuous-batching scheduler on the
+    (2,4) mesh: greedy slot-isolation (interleaved == solo batch-of-1,
+    bit-exact, batch-sharded slot pool) and sampled-request replay
+    determinism, dense + moe.
+
+These also run in the CI `distributed` job (pytest -m slow) so they cannot
+silently rot.
 """
 import os
 import subprocess
@@ -54,6 +61,14 @@ def test_coalesced_wire_format():
 @pytest.mark.slow
 def test_quantized_state_distributed():
     r = _run("check_quantized_state.py")
+    assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-4000:]
+    assert "ALL-OK" in r.stdout
+    assert "FAIL " not in r.stdout
+
+
+@pytest.mark.slow
+def test_serve_scheduler_distributed():
+    r = _run("check_serve_sched.py")
     assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-4000:]
     assert "ALL-OK" in r.stdout
     assert "FAIL " not in r.stdout
