@@ -20,13 +20,34 @@ weights while the quantized variants decode quantized ones, so their
 greedy TOKENS may differ; qsdp and qsdp-rowquant-wire consume the same
 quantized weights and are asserted token-identical.)
 
+A second LONG-PROMPT trace (many distinct prompt lengths, prompts several
+times the chunk size) replays through the qsdp wire policy under both
+admission paths:
+
+  qsdp-longprompt      blocking whole-prompt admission (one jit retrace
+                       per distinct prompt length; every admission stalls
+                       live decode slots for the full prompt)
+  qsdp-chunked         chunked, length-bucketed prefill (--prefill-chunk):
+                       at most one chunk rides each scheduler step, jit
+                       cache bounded at n_buckets traces
+
+and the run ASSERTS the bounded-retrace guarantee (a regression back to
+per-length retraces fails CI), the chunked slot-isolation invariant
+(every chunked request's greedy tokens bit-match its solo batch-of-1 run
+with the SAME chunk decomposition, generate(prefill_chunk=C,
+fold_step_keys=False) — chunked and whole-prompt prefill are distinct
+float paths, so each admission path is held to ITS solo reference), and
+the bounded per-launch stall (max_prefill_launch_tokens <= the padded
+chunk, vs the full prompt under blocking).
+
 Per variant this reports
   * tokens/s over the timed replay (compile excluded via a warmup drain
-    that covers every distinct prompt length in the trace),
+    that covers every distinct prompt length / chunk bucket in the trace),
   * per-request latency (submit -> last token) p50/p95, in decode steps
-    and in wall seconds,
+    and in wall seconds, plus p95 time-to-first-token,
   * mean slot occupancy of the pool,
   * analytic per-decode-step weight-gather wire bytes per device,
+  * prefill trace/launch counts and the per-launch stall bound,
 
 and writes everything to BENCH_serve.json (uploaded as a CI artifact next
 to BENCH_step.json).
@@ -43,7 +64,9 @@ import json
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core.qsdp import QSDPConfig
 from repro.models.config import ModelConfig
@@ -59,15 +82,20 @@ def variants():
     }
 
 
-def make_trace(rng, n_requests, arrival_rate, prompt_lens, gen_lens, vocab):
+def make_trace(rng, n_requests, arrival_rate, prompt_lens, gen_lens, vocab,
+               cycle_lens=False):
     """Deterministic synthetic load: (arrival_step, Request) pairs.  Arrival
     gaps are Poisson (exponential inter-arrival, rounded to decode steps);
-    prompt/gen lengths cycle through mixed buckets."""
+    prompt/gen lengths cycle through mixed buckets.  cycle_lens=True walks
+    prompt_lens round-robin instead of sampling, guaranteeing every
+    distinct length appears (the long-prompt retrace assertions need
+    that)."""
     trace = []
     step = 0
     for i in range(n_requests):
         step += int(rng.exponential(1.0 / arrival_rate))
-        plen = int(rng.choice(prompt_lens))
+        plen = int(prompt_lens[i % len(prompt_lens)] if cycle_lens
+                   else rng.choice(prompt_lens))
         gen = int(rng.choice(gen_lens))
         trace.append((step, Request(
             rid=f"req{i:03d}", prompt=rng.integers(0, vocab, size=plen).tolist(),
@@ -100,7 +128,8 @@ def replay(sched, trace, max_steps=100_000):
     return time.perf_counter() - t0
 
 
-def bench_variant(name, qsdp, rowquant, mcfg, trace, slots):
+def bench_variant(name, qsdp, rowquant, mcfg, trace, slots,
+                  prefill_chunk=0, prefill_buckets=4):
     prompt_lens = sorted({len(r.prompt) for _, r in trace})
     gen0 = trace[0][1].max_new_tokens
     setup = build_serve_setup(
@@ -109,14 +138,27 @@ def bench_variant(name, qsdp, rowquant, mcfg, trace, slots):
         gen=max(r.max_new_tokens for _, r in trace), rowquant_mlp=rowquant)
     sched = ContinuousScheduler(setup.model, setup.mesh, setup.spec,
                                 setup.params,
-                                gather_key=jax.random.PRNGKey(42))
+                                gather_key=jax.random.PRNGKey(42),
+                                prefill_chunk=prefill_chunk,
+                                prefill_buckets=prefill_buckets)
 
     # warmup: compile decode + one prefill per distinct prompt length
+    # (blocking) / per chunk bucket (chunked: one prompt of each bucket
+    # length, run one at a time so every bucket's launch compiles before
+    # the timed replay)
     t0 = time.perf_counter()
-    for j, plen in enumerate(prompt_lens):
-        sched.submit(Request(rid=f"warm{j}", prompt=list(range(1, plen + 1)),
-                             max_new_tokens=min(gen0, 2), seed=0))
-    sched.run()
+    if prefill_chunk:
+        for j, blen in enumerate(sched.buckets):
+            sched.submit(Request(rid=f"warm{j}",
+                                 prompt=list(range(1, blen + 1)),
+                                 max_new_tokens=min(gen0, 2), seed=0))
+            sched.run()
+    else:
+        for j, plen in enumerate(prompt_lens):
+            sched.submit(Request(rid=f"warm{j}",
+                                 prompt=list(range(1, plen + 1)),
+                                 max_new_tokens=min(gen0, 2), seed=0))
+        sched.run()
     compile_s = time.perf_counter() - t0
 
     # timed replay (snapshot counters so warmup is excluded)
@@ -126,6 +168,7 @@ def bench_variant(name, qsdp, rowquant, mcfg, trace, slots):
     done = {r.rid: sched.finished[r.rid] for _, r in trace}
     lat_steps = [c.finish_step - c.submit_step for c in done.values()]
     lat_s = [c.finish_time - c.submit_time for c in done.values()]
+    ttft_s = [c.first_token_time - c.submit_time for c in done.values()]
     tokens = st["tokens_generated"] - base["tokens_generated"]
     steps = st["decode_steps"] - base["decode_steps"]
     occ = ((st["mean_occupancy"] * st["decode_steps"]
@@ -141,9 +184,15 @@ def bench_variant(name, qsdp, rowquant, mcfg, trace, slots):
         "latency_steps_p95": float(np.percentile(lat_steps, 95)),
         "latency_s_p50": round(float(np.percentile(lat_s, 50)), 3),
         "latency_s_p95": round(float(np.percentile(lat_s, 95)), 3),
+        "ttft_s_p95": round(float(np.percentile(ttft_s, 95)), 3),
         "mean_occupancy": round(occ, 2),
         "slots": slots,
         "gather_bytes_per_decode_step": int(setup.decode_gather_bytes()),
+        "prefill_chunk": prefill_chunk,
+        "prefill_traces": int(st["prefill_traces"]),
+        "prefill_launches": int((st["prefill_chunks"] or st["prefills"])
+                                - (base["prefill_chunks"] or base["prefills"])),
+        "max_prefill_launch_tokens": int(st["max_prefill_launch_tokens"]),
     }, {rid: c.tokens.tolist() for rid, c in done.items()}
 
 
@@ -155,6 +204,9 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--arrival-rate", type=float, default=1.5,
                     help="mean arrivals per decode step")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="chunk size for the qsdp-chunked long-prompt row")
+    ap.add_argument("--prefill-buckets", type=int, default=4)
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
 
@@ -162,10 +214,14 @@ def main(argv=None):
         dims = dict(n_layers=2, d_model=128, d_ff=256)
         n_requests = args.requests or 8
         prompt_lens, gen_lens = (8, 12), (3, 4, 6)
+        # long-prompt trace: >= 8 distinct lengths, prompts several chunks
+        # long — the retrace + head-of-line-blocking regime
+        long_lens, long_n = tuple(range(9, 17)), 8
     else:
         dims = dict(n_layers=4, d_model=256, d_ff=512)
         n_requests = args.requests or 24
         prompt_lens, gen_lens = (16, 32, 48), (8, 16, 24)
+        long_lens, long_n = tuple(range(33, 64, 3)), 16
 
     mcfg = ModelConfig(name="bench-serve", arch_type="dense",
                        n_layers=dims["n_layers"], d_model=dims["d_model"],
@@ -178,20 +234,47 @@ def main(argv=None):
     out = {"config": {**dims, "mesh": "2x4", "slots": args.slots,
                       "requests": n_requests, "arrival_rate": args.arrival_rate,
                       "prompt_lens": list(prompt_lens),
-                      "gen_lens": list(gen_lens), "smoke": bool(args.smoke)},
+                      "gen_lens": list(gen_lens),
+                      "long_prompt_lens": list(long_lens),
+                      "prefill_chunk": args.prefill_chunk,
+                      "prefill_buckets": args.prefill_buckets,
+                      "smoke": bool(args.smoke)},
            "variants": {}}
     outputs = {}
+
+    def show(name, r):
+        print(f"{name:20s} {r['tokens_per_s']:8.1f} tok/s  "
+              f"step {r['step_ms_mean']:7.1f}ms  "
+              f"lat p50/p95 {r['latency_steps_p50']:.0f}/"
+              f"{r['latency_steps_p95']:.0f} steps  "
+              f"ttft p95 {r['ttft_s_p95']:.3f}s  "
+              f"occ {r['mean_occupancy']:.2f}/{r['slots']}  "
+              f"pf {r['prefill_traces']} traces/"
+              f"{r['max_prefill_launch_tokens']} tok-stall  "
+              f"gather {r['gather_bytes_per_decode_step'] / 2**20:.2f} MiB/step")
+
     for name, v in variants().items():
         r, toks = bench_variant(name, v["qsdp"], v["rowquant"], mcfg,
                                 trace, args.slots)
         out["variants"][name] = r
         outputs[name] = toks
-        print(f"{name:20s} {r['tokens_per_s']:8.1f} tok/s  "
-              f"step {r['step_ms_mean']:7.1f}ms  "
-              f"lat p50/p95 {r['latency_steps_p50']:.0f}/"
-              f"{r['latency_steps_p95']:.0f} steps  "
-              f"occ {r['mean_occupancy']:.2f}/{r['slots']}  "
-              f"gather {r['gather_bytes_per_decode_step'] / 2**20:.2f} MiB/step")
+        show(name, r)
+
+    # long-prompt trace: blocking vs chunked admission over the SAME qsdp
+    # wire policy (chunked is the fix for per-length retraces + prefill
+    # head-of-line blocking, so this is where its columns mean something)
+    long_trace = make_trace(np.random.default_rng(1), long_n,
+                            args.arrival_rate, long_lens, gen_lens,
+                            mcfg.vocab_size, cycle_lens=True)
+    for name, chunk in (("qsdp-longprompt", 0),
+                        ("qsdp-chunked", args.prefill_chunk)):
+        r, toks = bench_variant(name, QSDPConfig(min_quant_size=256), False,
+                                mcfg, long_trace, args.slots,
+                                prefill_chunk=chunk,
+                                prefill_buckets=args.prefill_buckets)
+        out["variants"][name] = r
+        outputs[name] = toks
+        show(name, r)
 
     # equal-tokens guarantee: every variant decoded the same trace greedily;
     # the quantized variants may *sample different tokens* than f32 baseline
@@ -203,6 +286,48 @@ def main(argv=None):
     q = out["variants"]["qsdp"]["gather_bytes_per_decode_step"]
     rq = out["variants"]["qsdp-rowquant-wire"]["gather_bytes_per_decode_step"]
     assert q < b and rq < b, (q, rq, b)
+
+    # chunked-admission contract on the long-prompt trace (CI tripwires):
+    # slot isolation — every chunked request's greedy tokens bit-match its
+    # solo batch-of-1 run with the SAME chunk decomposition; jit cache
+    # bounded by the bucket count even though the trace has len(long_lens)
+    # distinct prompt lengths (blocking compiles one trace per length — a
+    # regression back to that fails here); and a live slot never stalls
+    # behind more than one padded chunk of prefill.
+    blk = out["variants"]["qsdp-longprompt"]
+    chk = out["variants"]["qsdp-chunked"]
+    solo_setup = build_serve_setup(
+        mcfg, data_par=2, model_par=4, qsdp=QSDPConfig(min_quant_size=256),
+        batch=1, prompt_len=max(long_lens),
+        gen=max(r.max_new_tokens for _, r in long_trace),
+        batch_sharded=False)
+    for _, req in long_trace:
+        ref = np.asarray(jax.device_get(solo_setup.engine.generate(
+            solo_setup.params,
+            {"tokens": jnp.asarray(np.asarray(req.prompt, np.int32)[None])},
+            {"tokens": P(None)}, n_tokens=req.max_new_tokens,
+            key=jax.random.PRNGKey(42), fold_step_keys=False,
+            prefill_chunk=args.prefill_chunk,
+            prefill_buckets=args.prefill_buckets)))[0].tolist()
+        assert outputs["qsdp-chunked"][req.rid] == ref, \
+            f"chunked {req.rid} diverged from its solo chunked run"
+    assert chk["prefill_traces"] <= args.prefill_buckets, \
+        (chk["prefill_traces"], args.prefill_buckets)
+    assert blk["prefill_traces"] == len(long_lens), blk["prefill_traces"]
+    if args.prefill_buckets < len(long_lens):
+        # the headline guarantee — fewer compiled prefill shapes than
+        # distinct prompt lengths (vacuous if the CLI raised the bucket
+        # count past the trace's length diversity)
+        assert chk["prefill_traces"] < blk["prefill_traces"], (chk, blk)
+    chunk_top = min(args.prefill_chunk, solo_setup.spec.cache_len)
+    assert chk["max_prefill_launch_tokens"] <= chunk_top, (chk, chunk_top)
+    if chunk_top < max(long_lens):
+        # a live slot stalls behind at most one padded chunk, strictly less
+        # than the blocking path's full-prompt launches (vacuous if the CLI
+        # chunk covers the longest prompt)
+        assert (chk["max_prefill_launch_tokens"]
+                < blk["max_prefill_launch_tokens"]), (chk, blk)
+
     out["summary"] = {
         "gather_bytes_ratio_qsdp_vs_baseline": q / b,
         "gather_bytes_ratio_rowquant_vs_baseline": rq / b,
@@ -210,10 +335,22 @@ def main(argv=None):
         "tokens_equal_across_variants": all(
             sum(len(t) for t in v.values())
             == sum(len(t) for t in outputs["qsdp"].values())
-            for v in outputs.values()),
+            for v in (outputs[k] for k in variants())),
+        "chunked_matches_solo_chunked_tokens": True,
+        "chunked_prefill_traces": chk["prefill_traces"],
+        "blocking_prefill_traces": blk["prefill_traces"],
+        "chunked_max_prefill_launch_tokens": chk["max_prefill_launch_tokens"],
+        "blocking_max_prefill_launch_tokens": blk["max_prefill_launch_tokens"],
+        "ttft_p95_ratio_chunked_vs_blocking": (
+            round(chk["ttft_s_p95"] / max(blk["ttft_s_p95"], 1e-9), 3)),
     }
     print(f"qsdp ships {out['summary']['gather_bytes_ratio_qsdp_vs_baseline']:.3f}x "
           f"the baseline gather bytes per decode step at equal tokens")
+    print(f"chunked prefill: {chk['prefill_traces']} traces vs "
+          f"{blk['prefill_traces']} blocking for {len(long_lens)} distinct "
+          f"prompt lengths; per-launch stall {chk['max_prefill_launch_tokens']}"
+          f" vs {blk['max_prefill_launch_tokens']} tokens; "
+          f"ttft p95 {chk['ttft_s_p95']:.3f}s vs {blk['ttft_s_p95']:.3f}s")
 
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)

@@ -4,7 +4,10 @@ On the (2 data x 4 model) emulated mesh: the slot-isolation invariant —
 greedy request tokens bit-identical interleaved (batch-sharded slot pool,
 slot splice across the sharded batch axis) vs solo batch-of-1 — plus
 sampled-request reproducibility, for the dense and moe families with
-quantized weight gathers.
+quantized weight gathers; and one CHUNKED-prefill case (the KV ring is
+sequence-sharded over the 4-way model axis, so per-chunk ring writes and
+the chunk_attend psum cross shard boundaries only an 8-device run
+exercises).
 """
 import os
 import sys
@@ -92,6 +95,68 @@ for arch_kw in (dict(arch_type="dense", n_layers=2, d_model=64,
     check(f"sched-replay-identical-{fam}",
           all(np.array_equal(done[r.rid].tokens, done2[r.rid].tokens)
               for r in reqs))
+
+    if fam == "dense":
+        # chunked admission over the batch-sharded pool: per-chunk ring
+        # writes at per-slot offsets, multi-chunk prompts, mixed lengths —
+        # greedy tokens must bit-match the solo batch-of-1 run with the
+        # SAME chunk decomposition (generate(prefill_chunk=4)), with the
+        # jit cache bounded by the bucket count
+        sched3 = ContinuousScheduler(m, mesh, spec, params,
+                                     gather_key=GATHER_KEY,
+                                     prefill_chunk=4, prefill_buckets=3)
+        reqs3 = [Request(rid=f"ck{i}",
+                         prompt=rng.integers(0, VOCAB, size=int(pl)).tolist(),
+                         max_new_tokens=int(g))
+                 for i, (pl, g) in enumerate(
+                     [(9, 4), (3, 3), (13, 5), (6, 2), (11, 4)])]
+        for r in reqs3:
+            sched3.submit(r)
+        done3 = sched3.run()
+        worst = ""
+        ok = True
+        for r in reqs3:
+            ref = np.asarray(jax.device_get(solo.generate(
+                params,
+                {"tokens": jnp.asarray(np.asarray(r.prompt, np.int32)[None])},
+                {"tokens": P(None)}, n_tokens=r.max_new_tokens,
+                key=GATHER_KEY, fold_step_keys=False, prefill_chunk=4)))[0]
+            if not np.array_equal(done3[r.rid].tokens, ref):
+                ok = False
+                worst = (f"{r.rid}: got={done3[r.rid].tokens.tolist()} "
+                         f"ref={ref.tolist()}")
+        check("sched-chunked-vs-solo-dense", ok, worst)
+        check("sched-chunked-traces-bounded",
+              sched3.stats()["prefill_traces"] <= 3
+              and len(sched3.engine._chunk_steps) <= 3,
+              str(sched3.stats()["prefill_traces"]))
+
+        # bucket > s_loc regime: a padded chunk spans more global ring
+        # slots than one rank holds, so local ring indices alias across
+        # owners — the masked drop-scatter must stay collision-free
+        # (regression: duplicate scatter targets made tokens depend on the
+        # bucket a chunk was padded into)
+        sched4 = ContinuousScheduler(m, mesh, spec, params,
+                                     gather_key=GATHER_KEY,
+                                     prefill_chunk=16, prefill_buckets=2)
+        reqs4 = [Request(rid=f"bk{i}",
+                         prompt=rng.integers(0, VOCAB, size=int(pl)).tolist(),
+                         max_new_tokens=3)
+                 for i, pl in enumerate((13, 9, 17))]
+        for r in reqs4:
+            sched4.submit(r)
+        done4 = sched4.run()
+        ok = all(
+            np.array_equal(
+                done4[r.rid].tokens,
+                np.asarray(jax.device_get(solo.generate(
+                    params,
+                    {"tokens": jnp.asarray(np.asarray(r.prompt, np.int32)[None])},
+                    {"tokens": P(None)}, n_tokens=r.max_new_tokens,
+                    key=GATHER_KEY, fold_step_keys=False, prefill_chunk=16,
+                    prefill_buckets=2)))[0])
+            for r in reqs4)
+        check("sched-chunked-bucket-gt-sloc", ok)
 
 print("ALL-OK" if not FAIL else f"FAILED: {FAIL}")
 sys.exit(0 if not FAIL else 1)

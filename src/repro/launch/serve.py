@@ -23,8 +23,8 @@ import numpy as np
 
 from ..core.qsdp import QSDPConfig
 from ..data import SyntheticLM
-from ..serve import (ContinuousScheduler, Request, build_serve_setup,
-                     make_prompt_batch, scheduler_batch_builder)
+from ..serve import (Request, build_serve_setup, make_prompt_batch,
+                     make_scheduler)
 
 
 def parse_args(argv=None):
@@ -52,15 +52,26 @@ def parse_args(argv=None):
                          "(0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="--continuous: per-request top-k (0 = full vocab)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="--continuous: prefill at most this many prompt "
+                         "tokens per scheduler step (0 = blocking "
+                         "whole-prompt admission)")
+    ap.add_argument("--prefill-buckets", type=int, default=4,
+                    help="--continuous: chunk length buckets — bounds the "
+                         "chunked-prefill jit cache at this many traces")
+    ap.add_argument("--prefill-interleave", type=int, default=1,
+                    help="--continuous: chunk launches per scheduler step "
+                         "(fairness knob; 1 = maximally decode-fair)")
     return ap.parse_args(argv)
 
 
 def run_continuous(setup, args) -> int:
     rng = np.random.default_rng(args.seed)
-    sched = ContinuousScheduler(
-        setup.model, setup.mesh, setup.spec, setup.params,
-        gather_key=jax.random.PRNGKey(args.seed),
-        batch_builder=scheduler_batch_builder(setup.cfg, setup.spec, setup.ms))
+    sched = make_scheduler(
+        setup, gather_key=jax.random.PRNGKey(args.seed),
+        prefill_chunk=args.prefill_chunk,
+        prefill_buckets=args.prefill_buckets,
+        prefill_interleave=args.prefill_interleave)
     # mixed prompt/gen lengths, seeded: realistic heavy-traffic shape
     for i in range(args.requests):
         plen = int(rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1))
@@ -75,12 +86,18 @@ def run_continuous(setup, args) -> int:
     dt = time.time() - t0
     st = sched.stats()
     lat = [c.finish_step - c.submit_step for c in done.values()]
+    ttft = [c.first_token_time - c.submit_time for c in done.values()]
     print(f"# {setup.cfg.name} continuous: {len(done)} requests, "
           f"{st['tokens_generated']} tokens in {dt:.2f}s "
           f"({st['tokens_generated'] / dt:.1f} tok/s incl. compile), "
           f"occupancy {st['mean_occupancy']:.2f}/{st['slots']}, "
           f"latency p50={np.percentile(lat, 50):.0f} "
-          f"p95={np.percentile(lat, 95):.0f} steps")
+          f"p95={np.percentile(lat, 95):.0f} steps, "
+          f"ttft p95={np.percentile(ttft, 95):.3f}s")
+    if args.prefill_chunk:
+        print(f"# chunked prefill: chunk={args.prefill_chunk} "
+              f"buckets={sched.buckets} -> {st['prefill_chunks']} chunk "
+              f"launches, {st['prefill_traces']} compiled prefill shapes")
     print(f"# decode-step weight gathers = "
           f"{setup.decode_gather_bytes() / 2**20:.2f} MiB/device")
     first = done[sorted(done)[0]]

@@ -293,6 +293,78 @@ def decode_new_kv(x: jax.Array, w: dict, cfg: AttnConfig, cos, sin):
     return q_all, k1, v1
 
 
+def chunk_new_kv(x: jax.Array, w: dict, cfg: AttnConfig, cos, sin):
+    """Multi-token variant of :func:`decode_new_kv` for chunked prefill.
+
+    x: (B, Lq, d) — one prompt chunk per batch slot.  cos/sin are
+    (B, Lq, hd//2) per-slot-per-token rotations (each slot's chunk starts
+    at its own offset).  Returns (q_all (B, Lq, Hp, hd),
+    k1/v1 (B, Lq, n_kv, hd)) — full (padded) query heads gathered, KV
+    un-expanded, exactly the shapes the ring cache stores."""
+    b, lq, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ w["wq"]) if "bq" not in w else (x @ w["wq"] + w["bq"].astype(x.dtype))
+    q = q.reshape(b, lq, cfg.heads_local, hd)
+    k1 = (x @ w["wk"]) if "bk" not in w else (x @ w["wk"] + w["bk"].astype(x.dtype))
+    v1 = (x @ w["wv"]) if "bv" not in w else (x @ w["wv"] + w["bv"].astype(x.dtype))
+    k1 = k1.reshape(b, lq, cfg.kv_local, hd)
+    v1 = v1.reshape(b, lq, cfg.kv_local, hd)
+    q = apply_rope(q, cos, sin)
+    k1 = apply_rope(k1, cos, sin)
+    q_all = lax.all_gather(q, MODEL_AXIS, axis=2, tiled=True)  # (B, Lq, Hp, hd)
+    if cfg.kv_mode == "tp":
+        k1 = lax.all_gather(k1, MODEL_AXIS, axis=2, tiled=True)
+        v1 = lax.all_gather(v1, MODEL_AXIS, axis=2, tiled=True)
+    return q_all, k1, v1
+
+
+def chunk_attend(
+    q_all: jax.Array,  # (B, Lq, Hp, hd) — all (padded) query heads
+    k_cache: jax.Array,  # (B, S_loc, n_kv, hd) — this rank's seq chunk,
+    v_cache: jax.Array,  # the chunk's own KV already written
+    cfg: AttnConfig,
+    q_pos: jax.Array,  # (B, Lq) per-slot-per-token query positions
+    window: int,
+):
+    """Multi-query flash-decode over the seq-sharded ring cache — the
+    chunked-prefill analogue of :func:`decode_attend`.  Each query token
+    attends every ring slot whose held position is causally visible
+    (p_s >= 0 and p_s <= its own position); the per-rank partials combine
+    with the same log-sum-exp psum.  Padded chunk tokens (beyond a slot's
+    valid chunk length) compute garbage that the caller never reads —
+    their KV is never written, so nothing they produce can reach a valid
+    token.  Returns (B, Lq, Hp, hd) f32 (padded heads zero)."""
+    b, lq, hp, hd = q_all.shape
+    s_loc = k_cache.shape[1]
+    rank = lax.axis_index(MODEL_AXIS)
+    qr, k_cache, v_cache = _kv_major_q(q_all, k_cache, v_cache, cfg)
+
+    # slot validity per query token: slot s holds p_s = q - ((q - s) mod W)
+    s_glob = rank * s_loc + jnp.arange(s_loc)
+    p_s = q_pos[..., None] - jnp.mod(q_pos[..., None] - s_glob, window)
+    valid = p_s >= 0  # (B, Lq, S_loc)
+
+    scale = 1.0 / math.sqrt(hd)
+    s_ij = jnp.einsum("blkgd,bskd->blkgs", qr, k_cache.astype(qr.dtype),
+                      preferred_element_type=jnp.float32) * scale
+    s_ij = jnp.where(valid[:, :, None, None, :], s_ij, -jnp.inf)
+    m = lax.pmax(jnp.max(s_ij, axis=-1), MODEL_AXIS)  # (B, Lq, K, G)
+    m_safe = jnp.where(jnp.isinf(m), 0.0, m)
+    p = jnp.exp(s_ij - m_safe[..., None])
+    p = jnp.where(valid[:, :, None, None, :], p, 0.0)
+    l = lax.psum(jnp.sum(p, axis=-1), MODEL_AXIS)
+    o = lax.psum(
+        jnp.einsum("blkgs,bskd->blkgd", p.astype(q_all.dtype),
+                   v_cache.astype(q_all.dtype),
+                   preferred_element_type=jnp.float32),
+        MODEL_AXIS)
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    o = o.reshape(b, lq, cfg.n_heads, hd)
+    if hp > cfg.n_heads:  # padded heads contribute zero
+        o = jnp.pad(o, ((0, 0), (0, 0), (0, hp - cfg.n_heads), (0, 0)))
+    return o
+
+
 def ring_slot(pos: jax.Array, window: int, s_loc: int):
     """Ring-buffer addressing: (local slot index, is_mine flag).
 
@@ -308,17 +380,20 @@ def _kv_major_q(q_all: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                 cfg: AttnConfig):
     """Arrange the real query heads kv-major for the batched decode einsums.
 
-    Regular GQA (n_heads == n_kv * group) reshapes q to (B, n_kv, group, hd)
-    and attends the un-expanded cache directly (no group-x cache copy —
+    q_all is (..., Hp, hd) — the leading dims pass through unchanged
+    (decode: (B,); chunked prefill: (B, Lq)).  Regular GQA
+    (n_heads == n_kv * group) reshapes q to (..., n_kv, group, hd) and
+    attends the un-expanded cache directly (no group-x cache copy —
     §Perf P2-2).  Irregular ratios (e.g. n_kv > n_heads, where the reshape
     is impossible) gather each query head's kv head from the cache instead
     and run the same einsums with a per-head group of 1."""
-    b, _, hd = q_all.shape
+    *lead, _, hd = q_all.shape
     if cfg.n_heads == cfg.n_kv * cfg.group:
-        return (q_all[:, : cfg.n_heads].reshape(b, cfg.n_kv, cfg.group, hd),
+        return (q_all[..., : cfg.n_heads, :].reshape(
+                    *lead, cfg.n_kv, cfg.group, hd),
                 k_cache, v_cache)
     kv_idx = jnp.clip(jnp.arange(cfg.n_heads) // cfg.group, 0, cfg.n_kv - 1)
-    return (q_all[:, : cfg.n_heads].reshape(b, cfg.n_heads, 1, hd),
+    return (q_all[..., : cfg.n_heads, :].reshape(*lead, cfg.n_heads, 1, hd),
             jnp.take(k_cache, kv_idx, axis=2),
             jnp.take(v_cache, kv_idx, axis=2))
 

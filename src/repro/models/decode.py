@@ -54,6 +54,10 @@ Cache = dict[str, Any]
 # (rowquant decode and serve.engine.prepare_wire_params share this list)
 ROWQUANT_MLP = ("w_gate", "w_up", "w_down")
 
+# families whose prompts may prefill chunk-at-a-time into the pool cache
+# (pure attention stacks; modality/state caches still prefill whole-prompt)
+CHUNKED_PREFILL_ARCHS = ("dense", "moe")
+
 
 @dataclasses.dataclass(frozen=True)
 class DecodeSpec:
@@ -191,7 +195,11 @@ class DecodeModel:
                   sample: Optional[dict] = None) -> tuple[jax.Array, Cache]:
         """tokens (B_loc,) int32 current input; pos () or (B_loc,) int32 its
         position — a vector gives every batch slot its own sequence position
-        (continuous batching).  Returns (next_tokens (B_loc,), new_cache).
+        (continuous batching).  pos[b] < 0 marks a DEAD lane: its KV write
+        is masked out (ring bytes frozen), every cached slot fails the
+        validity test (zero attention output), and schedulers pair it with
+        temp<=0 so the row burns no Gumbel draws.  Returns
+        (next_tokens (B_loc,), new_cache).
 
         sample (present iff ``spec.sampling``): per-slot sampling state —
         {"temp": (B_loc,) f32, "top_k": (B_loc,) i32, "key": (B_loc, 2) u32}.
@@ -259,12 +267,18 @@ class DecodeModel:
         token-sized gather + scatter per layer (~KB) instead of re-emitting
         the whole cache as scan ys (§Perf P2-1).  pos is (B,): each batch
         slot writes its OWN ring slot, so interleaved requests at different
-        positions never touch each other's cache lines."""
+        positions never touch each other's cache lines.
+
+        pos[b] < 0 is the DEAD-LANE sentinel (retired / never-filled /
+        mid-chunked-prefill slots): the lane's write is masked out entirely,
+        so a dead lane's ring bytes are frozen — required by the chunked
+        prefill path, which fills a lane's ring incrementally and cannot
+        rely on a full-ring splice to wipe garbage writes."""
         b = k1.shape[0]
         s_loc = kc_all.shape[2]
         idx, is_mine = attn_mod.ring_slot(pos, self.spec.cache_len, s_loc)
         bi = jnp.arange(b)
-        mine = is_mine[:, None, None]
+        mine = (is_mine & (pos >= 0))[:, None, None]
         new_k = jnp.where(mine, k1.astype(kc_all.dtype), kc_all[layer, bi, idx])
         new_v = jnp.where(mine, v1.astype(vc_all.dtype), vc_all[layer, bi, idx])
         kc_all = kc_all.at[layer, bi, idx].set(new_k)
@@ -284,9 +298,11 @@ class DecodeModel:
         h = L.rms_norm(x, w["mlp_norm"], cfg.norm_eps)
         if mlp == "dense":
             x = x + L.swiglu_mlp(h, w["w_gate"], w["w_up"], w["w_down"])
-        else:  # moe
+        else:  # moe — drop-free dispatch: dead/other lanes must never evict
+            # a live lane's expert slot (slot isolation; bit-neutral while
+            # B * top_k fits the capacity floor, where nothing ever drops)
             y, _ = moe_mod.moe_layer(h, {k: w[k] for k in ("router", "w_gate", "w_up", "w_down")},
-                                     m.ecfg)
+                                     m.ecfg, no_drop=True)
             x = x + y
         return x, kc_all, vc_all
 
@@ -336,6 +352,137 @@ class DecodeModel:
             body, (x, cache["k"], cache["v"]), (jnp.arange(nl), grp))
         cache = dict(cache, k=k_new, v=v_new)
         return x, cache
+
+    # ------------------------------------------------------------------
+    # Chunked prefill (one prompt chunk per slot, fused into the pool)
+    # ------------------------------------------------------------------
+
+    def _write_chunk_kv(self, kc_all, vc_all, layer, k1, v1, pos, n_valid):
+        """Write one chunk's KV into the stacked pool cache at each slot's
+        own ring offsets.  k1/v1 (B, Lq, n_kv, hd); pos (B, Lq) global
+        positions; n_valid (B,) valid tokens per slot (0 = lane not
+        prefilling).
+
+        ``ring_slot`` indices are LOCAL (slot - owner * s_loc), so two
+        tokens of one padded chunk can alias the same local index whenever
+        the chunk spans more global slots than one rank holds (Lq > s_loc
+        — e.g. padding tokens folding onto a valid token's slot).  Every
+        non-owned or invalid token is therefore redirected to the
+        out-of-range index s_loc and DROPPED, leaving exactly one scatter
+        target per written slot: deterministic, and nothing is written for
+        padded tokens or non-prefilling lanes, so live decode slots' (and
+        dead lanes') ring bytes are untouched."""
+        b, lq = pos.shape
+        s_loc = kc_all.shape[2]
+        idx, is_mine = attn_mod.ring_slot(pos, self.spec.cache_len, s_loc)
+        bi = jnp.broadcast_to(jnp.arange(b)[:, None], (b, lq))
+        tok_valid = jnp.arange(lq)[None, :] < n_valid[:, None]
+        idx = jnp.where(is_mine & tok_valid, idx, s_loc)  # s_loc => dropped
+        kc_all = kc_all.at[layer, bi, idx].set(k1.astype(kc_all.dtype),
+                                               mode="drop")
+        vc_all = vc_all.at[layer, bi, idx].set(v1.astype(vc_all.dtype),
+                                               mode="drop")
+        return kc_all, vc_all
+
+    def _chunk_attn_layer(self, x, w, kc_all, vc_all, layer, pos, n_valid,
+                          cos, sin, mlp):
+        """One attention layer over a (B, Lq, d) chunk: write the chunk's KV
+        into the ring first, then attend the full ring (the chunk sees its
+        own earlier tokens AND every previously-prefilled chunk through the
+        cache, exactly like decode sees the prefix)."""
+        m, cfg = self.m, self.m.cfg
+        b, lq, _ = x.shape
+        h = L.rms_norm(x, w["attn_norm"], cfg.norm_eps)
+        q_all, k1, v1 = attn_mod.chunk_new_kv(h, w, m.acfg, cos, sin)
+        kc_all, vc_all = self._write_chunk_kv(kc_all, vc_all, layer, k1, v1,
+                                              pos, n_valid)
+        kc = lax.dynamic_index_in_dim(kc_all, layer, 0, keepdims=False)
+        vc = lax.dynamic_index_in_dim(vc_all, layer, 0, keepdims=False)
+        o = attn_mod.chunk_attend(q_all, kc, vc, m.acfg, pos, self.spec.cache_len)
+        hp = o.shape[2]
+        a = attn_mod.decode_out_proj(o.reshape(b * lq, hp, cfg.head_dim), w,
+                                     m.acfg, x.dtype)
+        x = x + a.reshape(b, lq, -1)
+        h = L.rms_norm(x, w["mlp_norm"], cfg.norm_eps)
+        if mlp == "dense":
+            x = x + L.swiglu_mlp(h, w["w_gate"], w["w_up"], w["w_down"])
+        else:  # moe — no_drop: expert capacity must never let padding or
+            # co-resident lanes evict a valid token's expert slot (slot
+            # isolation), so the chunk path dispatches drop-free
+            y, _ = moe_mod.moe_layer(
+                h.reshape(b * lq, -1),
+                {k: w[k] for k in ("router", "w_gate", "w_up", "w_down")},
+                m.ecfg, no_drop=True)
+            x = x + y.reshape(b, lq, -1)
+        return x, kc_all, vc_all
+
+    def _chunk_attn_stack(self, params, prefix, x, cache, pos, n_valid, cos,
+                          sin, key, mlp):
+        m = self.m
+        grp = m._group(params, prefix)
+        names = list(grp.keys())
+
+        def body(carry, inp):
+            x, kc_all, vc_all = carry
+            idx, lw = inp
+            lkey = jax.random.fold_in(key, idx)
+            # mlp=None: same gather routing as whole-prompt prefill, so the
+            # dequantized weights are bit-identical between the two paths.
+            w = self._gather_layer_w(prefix, names, lw, lkey, mlp=None)
+            x, kc_all, vc_all = self._chunk_attn_layer(
+                x, w, kc_all, vc_all, idx, pos, n_valid, cos, sin, mlp)
+            return (x, kc_all, vc_all), None
+
+        nl = jax.tree.leaves(grp)[0].shape[0]
+        (x, k_new, v_new), _ = lax.scan(
+            body, (x, cache["k"], cache["v"]), (jnp.arange(nl), grp))
+        return x, dict(cache, k=k_new, v=v_new)
+
+    def prefill_chunk_fn(self, params: Params, cache: Cache,
+                         tokens: jax.Array, offset: jax.Array,
+                         n_valid: jax.Array, key: jax.Array,
+                         sample: Optional[dict] = None
+                         ) -> tuple[jax.Array, Cache]:
+        """Offset-aware chunked prefill fused over the WHOLE slot pool.
+
+        tokens (B_loc, Lb): one right-padded prompt chunk per slot, Lb the
+        bucket length (the scheduler pads chunks into a bounded bucket set
+        so the jit cache holds at most n_buckets traces).  offset (B_loc,)
+        is each slot's chunk start position, n_valid (B_loc,) its real
+        chunk length (0 = lane not prefilling this step: nothing is read
+        from or written to that lane).  Writes each chunk's KV into the
+        slot's ring at its offsets and returns (next_tokens (B_loc,),
+        cache) — next_tokens is meaningful only for lanes whose chunk ends
+        the prompt (sampled from the last valid position with
+        n_consumed = offset + n_valid, identical to whole-prompt prefill's
+        keying), garbage elsewhere.
+
+        Same gather key / per-layer fold_in as prefill_fn and decode_fn, so
+        the dequantized weights are bit-identical to the whole-prompt path.
+        Supported for CHUNKED_PREFILL_ARCHS (pure attention stacks)."""
+        m, cfg = self.m, self.m.cfg
+        if cfg.arch_type not in CHUNKED_PREFILL_ARCHS:
+            raise NotImplementedError(
+                f"chunked prefill supports {CHUNKED_PREFILL_ARCHS}, "
+                f"not {cfg.arch_type!r}")
+        b, lq = tokens.shape
+        offset = jnp.asarray(offset, jnp.int32)
+        n_valid = jnp.asarray(n_valid, jnp.int32)
+        emb = m.engine.gather("embed", params["embed"], key)
+        x = L.embed_vocab_parallel(tokens, emb)  # (B, Lq, d)
+        pos = offset[:, None] + jnp.arange(lq, dtype=jnp.int32)[None, :]
+        cos, sin = L.rope_cos_sin(pos, cfg.head_dim, cfg.rope_theta)
+        x, cache = self._chunk_attn_stack(
+            params, "layers", x, cache, pos, n_valid, cos, sin, key,
+            mlp="moe" if cfg.is_moe else "dense")
+        fn = m.engine.gather("final_norm", params["final_norm"], key)
+        last = jnp.clip(n_valid - 1, 0, lq - 1)
+        h = L.rms_norm(x[jnp.arange(b), last], fn, cfg.norm_eps)
+        head = emb if cfg.tie_embeddings else m.engine.gather(
+            "lm_head", params["lm_head"], key)
+        logits = L.vocab_parallel_logits(h, head)
+        nxt = self._sample(logits, head.shape[0], sample, offset + n_valid)
+        return nxt.astype(jnp.int32), cache
 
     def _decode_mamba_layer(self, x, w, conv, ssm):
         m, cfg = self.m, self.m.cfg

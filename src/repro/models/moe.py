@@ -55,9 +55,23 @@ def moe_layer(
     x: jax.Array,  # (T, d) tokens, replicated over model
     w: dict,  # router (d, E) replicated; w_gate/w_up (E_loc, d, ff); w_down (E_loc, ff, d)
     cfg: MoEConfig,
+    no_drop: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Returns (out (T, d) replicated, aux_loss scalar identical on every
     model rank).
+
+    no_drop=True sizes the dispatch buffer to the worst case (every
+    assignment to one expert) so capacity NEVER drops a token.  Standard
+    capacity drops make one token's output depend on which OTHER tokens
+    share the batch (they compete for expert slots) — fine for training,
+    but the chunked-prefill serve path flattens every pool lane plus
+    right-padding into one token batch, and slot isolation requires a
+    lane's tokens to be independent of co-resident lanes and padding.
+    COST: the (E, C, d) buffer, its all_to_alls, and the expert matmuls
+    grow to n_experts x the balanced-load size (dense rows are zero and
+    wasted) — cheap at decode/chunk token counts, but a large-E,
+    long-chunk deployment should replace this with a ragged/segment
+    dispatch rather than widen the dense buffer further.
 
     Token parallelism over the model axis: the replicated token set is
     SPLIT 1/tp per rank before routing (tp_split_tokens) so each token is
@@ -76,7 +90,8 @@ def moe_layer(
             x = jnp.pad(x, ((0, pad_t), (0, 0)))
         x = tp_split_tokens(x, 0)
     t = x.shape[0]
-    c = cfg.capacity(t)
+    c = (max(8, -(-t * k // 8) * 8) if no_drop  # worst case: zero drops
+         else cfg.capacity(t))
 
     logits = x.astype(jnp.float32) @ w["router"].astype(jnp.float32)  # (T, E)
     probs = jax.nn.softmax(logits, axis=-1)

@@ -128,3 +128,18 @@ def scheduler_batch_builder(cfg: ModelConfig, spec: DecodeSpec, ms: MeshSpec):
         return make_prompt_batch(cfg, pf_spec, ms, tokens)
 
     return build
+
+
+def make_scheduler(setup: ServeSetup, *, gather_key=None,
+                   prefill_chunk: int = 0, prefill_buckets: int = 4,
+                   prefill_interleave: int = 1):
+    """The ContinuousScheduler every serve entry point builds from a
+    ServeSetup: launcher, bench, and examples get the same batch_builder
+    (modality stubs included) and the same chunked-admission knobs."""
+    from .scheduler import ContinuousScheduler
+    return ContinuousScheduler(
+        setup.model, setup.mesh, setup.spec, setup.params,
+        gather_key=gather_key,
+        batch_builder=scheduler_batch_builder(setup.cfg, setup.spec, setup.ms),
+        prefill_chunk=prefill_chunk, prefill_buckets=prefill_buckets,
+        prefill_interleave=prefill_interleave)

@@ -74,6 +74,34 @@ def wire_param_pspecs(model: Model, params: dict) -> dict:
     return out
 
 
+def prefill_bucket_sizes(chunk: int, n_buckets: int, cache_len: int
+                         ) -> tuple[int, ...]:
+    """The bounded set of padded chunk lengths for chunked prefill:
+    `n_buckets` evenly spaced sizes up to the chunk size (clamped to the KV
+    ring so a chunk's ring targets stay collision-free), deduped ascending.
+    Every chunk right-pads to the smallest bucket that fits, so the jit
+    cache compiles at most `len(buckets)` prefill traces no matter how many
+    distinct prompt lengths a trace contains.  A valid token's numerics are
+    INDEPENDENT of the bucket it rides in (padded rows add query rows, they
+    never enter another row's reductions), so bucketing cannot perturb
+    tokens — only trace counts."""
+    if chunk <= 0:
+        return ()
+    top = min(chunk, cache_len) if cache_len else chunk
+    n = max(1, min(n_buckets, top))
+    return tuple(sorted({max(1, round(top * i / n)) for i in range(1, n + 1)}
+                        | {top}))
+
+
+def prefill_bucket_for(length: int, buckets: tuple[int, ...]) -> int:
+    """Smallest bucket that holds a chunk of `length` tokens."""
+    for b in buckets:
+        if length <= b:
+            return b
+    raise ValueError(f"chunk of {length} tokens exceeds every bucket "
+                     f"{buckets}")
+
+
 def make_sample_params(temperature: float = 0.0, top_k: int = 0,
                        seed: int = 0, b: int = 1) -> dict:
     """The `sample` tree consumed by DecodeModel.decode_fn/prefill_fn when
@@ -109,6 +137,10 @@ class ServeEngine:
         _, self.cache_pspecs = self.dm.cache_struct()
         self._decode = None
         self._prefill = None
+        # chunked prefill: one compiled step per BUCKET length — the
+        # continuous scheduler right-pads prompt chunks into a bounded
+        # bucket set, so this cache holds at most n_buckets entries.
+        self._chunk_steps: dict[int, object] = {}
 
     # -- jitted steps ---------------------------------------------------------
 
@@ -150,6 +182,27 @@ class ServeEngine:
             self._prefill = jax.jit(fn)
         return self._prefill
 
+    def prefill_chunk_step(self, bucket_len: int):
+        """jit'd chunked prefill over the whole slot pool: (params, cache,
+        tokens (B, Lb), offset (B,), n_valid (B,), key [, sample]) ->
+        (next_tokens (B,), cache).  Compiled once per bucket length Lb;
+        writes each prefilling slot's chunk KV into its ring lane in place
+        (non-prefilling lanes pass n_valid 0 and are untouched), so it runs
+        back-to-back with decode_step over the same donated cache."""
+        if bucket_len not in self._chunk_steps:
+            in_specs = [self._pspecs, self.cache_pspecs, P(self.bax),
+                        P(self.bax), P(self.bax), P()]
+            if self.spec.sampling:
+                in_specs.append(self.sample_pspecs())
+            fn = shard_map(
+                self.dm.prefill_chunk_fn, mesh=self.mesh,
+                in_specs=tuple(in_specs),
+                out_specs=(P(self.bax), self.cache_pspecs),
+                check_vma=False,
+            )
+            self._chunk_steps[bucket_len] = jax.jit(fn, donate_argnums=(1,))
+        return self._chunk_steps[bucket_len]
+
     # -- convenience ------------------------------------------------------------
 
     def init_cache(self):
@@ -161,7 +214,8 @@ class ServeEngine:
 
     def generate(self, params, prompt_batch: dict, batch_pspecs: dict,
                  n_tokens: int, key: Optional[jax.Array] = None,
-                 sample: Optional[dict] = None, fold_step_keys: bool = True):
+                 sample: Optional[dict] = None, fold_step_keys: bool = True,
+                 prefill_chunk: int = 0, prefill_buckets: int = 4):
         """Prefill the prompt then decode n_tokens (greedy unless a `sample`
         tree is given on a ``spec.sampling`` engine).
 
@@ -171,7 +225,16 @@ class ServeEngine:
         the step key, and a fixed key is what makes a request's tokens
         bit-identical between this solo path and the continuous-batching
         scheduler (which interleaves requests at different step indices, so
-        no per-step key schedule could line up)."""
+        no per-step key schedule could line up).
+
+        prefill_chunk=C > 0 prefills through ``prefill_chunk_step`` in
+        C-token chunks instead of one whole-prompt launch — the SAME
+        computation the chunked continuous scheduler runs, which is what
+        makes this the bit-exact solo reference for chunked serving.  (The
+        two prefill styles are distinct float paths: chunked attention
+        reads earlier chunks back from the bf16 KV ring, whole-prompt flash
+        attention never rounds through the cache — each is deterministic
+        and composition-independent, but their greedy tokens may differ.)"""
         key = key if key is not None else jax.random.PRNGKey(0)
         b, s = prompt_batch["tokens"].shape
         if sample is not None and not self.spec.sampling:
@@ -181,8 +244,35 @@ class ServeEngine:
         if self.spec.sampling and sample is None:
             sample = greedy_sample_params(b)
         extra = (sample,) if self.spec.sampling else ()
-        nxt, cache = self.prefill_step(batch_pspecs)(
-            params, prompt_batch, key, *extra)
+        if prefill_chunk:
+            if fold_step_keys:
+                raise ValueError(
+                    "chunked prefill serves a fixed quantized model; pass "
+                    "fold_step_keys=False")
+            if self.spec.cache_len and s > self.spec.cache_len:
+                # the scheduler rejects these at submit(); enforce the same
+                # bound here — a chunk at offset >= cache_len would
+                # overwrite ring slots still holding LIVE earlier positions
+                # before they are attended (non-causal reads)
+                raise ValueError(
+                    f"prompt ({s}) exceeds the KV ring "
+                    f"({self.spec.cache_len}); chunked prefill cannot "
+                    "stream a prompt through a smaller sliding window")
+            buckets = prefill_bucket_sizes(prefill_chunk, prefill_buckets,
+                                           self.spec.cache_len)
+            tokens = prompt_batch["tokens"]
+            cache = self.init_cache()
+            for o in range(0, s, prefill_chunk):
+                clen = min(prefill_chunk, s - o)
+                bucket = prefill_bucket_for(clen, buckets)
+                chunk = jnp.zeros((b, bucket), jnp.int32)
+                chunk = chunk.at[:, :clen].set(tokens[:, o:o + clen])
+                nxt, cache = self.prefill_chunk_step(bucket)(
+                    params, cache, chunk, jnp.full((b,), o, jnp.int32),
+                    jnp.full((b,), clen, jnp.int32), key, *extra)
+        else:
+            nxt, cache = self.prefill_step(batch_pspecs)(
+                params, prompt_batch, key, *extra)
         out = [nxt]
         dec = self.decode_step()
         for i in range(n_tokens - 1):

@@ -1,29 +1,58 @@
 """Continuous-batching request scheduler over the jit-compiled ServeEngine.
 
 The scheduler owns a fixed pool of ``B = spec.batch_global`` decode slots.
-Queued requests are admitted into freed slots MID-DECODE: admission runs a
-batch-of-1 prefill that writes the prompt's KV (the slot's entire ring /
-state, so nothing stale survives from the previous occupant) and the
-resulting single-slot cache is spliced into the pool cache with a
-token-addressed ``dynamic_update_slice`` along the batch axis — live slots
-are never touched.  Every decode step then advances ALL slots at their own
-per-slot positions (``DecodeModel.decode_fn`` with ``pos: (B,)``), streams
-each slot's token back to its request, retires slots on EOS / length, and
-refills them from the queue.
+Queued requests are admitted into freed slots MID-DECODE, by one of two
+admission paths:
+
+* **Blocking (default, ``prefill_chunk=0``)** — admission runs a batch-of-1
+  prefill that writes the prompt's KV (the slot's entire ring, so nothing
+  stale survives from the previous occupant) and the resulting single-slot
+  cache is spliced into the pool cache with a token-addressed
+  ``dynamic_update_slice`` along the batch axis.  Every queued prompt
+  stalls the pooled decode for its full length, and each distinct prompt
+  length costs one jit retrace.
+
+* **Chunked (``prefill_chunk=C``)** — prompts prefill C tokens at a time
+  through ``ServeEngine.prefill_chunk_step``: each scheduler step advances
+  every *prefilling* slot by at most one chunk (one pooled launch, chunks
+  from concurrently-admitting slots ride it together), written straight
+  into the slot's KV ring at its chunk offset, alongside the normal pooled
+  decode — live slots never wait more than one chunk's latency for a new
+  arrival, however long its prompt.  Chunks are right-padded into a small
+  set of length buckets (``serve.common.prefill_bucket_sizes``) so the jit
+  cache is bounded at n_buckets traces instead of one per distinct prompt
+  length.  ``prefill_interleave`` is the fairness knob: chunk launches per
+  scheduler step (1 = maximally decode-fair, higher drains the queue
+  faster at the cost of longer steps).  Supported for the pure-attention
+  families (``models.decode.CHUNKED_PREFILL_ARCHS``).
+
+Dead lanes (never filled, retired, or mid-chunked-prefill) carry the
+sentinel ``pos = -1``: the decode step masks their KV-ring write entirely
+(bytes frozen), their attention sees zero valid slots, and their sampling
+row is clamped to temp 0 / top-k 1 so it takes the draw-free greedy
+reduction.  Nothing a dead lane computes can reach a live lane, and the
+conformance suite asserts its cache bytes never change.
 
 Invariants this module is built around (enforced by
-tests/test_serve_scheduler.py and scripts/check_serve_sched.py):
+tests/test_serve_scheduler.py, tests/test_chunked_prefill.py and
+scripts/check_serve_sched.py):
 
 * **Slot isolation** — with greedy decoding, a request's output tokens are
   bit-identical whether it runs alone in a batch-of-1 engine
-  (``ServeEngine.generate(..., fold_step_keys=False)``) or interleaved with
-  arbitrary other requests here.  Nothing a slot computes reads another
-  slot's cache, position, or sampling state.
+  (``ServeEngine.generate(..., fold_step_keys=False)``, with the MATCHING
+  ``prefill_chunk`` so the solo run performs the same chunk decomposition)
+  or interleaved with arbitrary other requests here.  Nothing a slot
+  computes reads another slot's cache, position, or sampling state, and a
+  chunk's numerics are independent of the bucket it is padded into.
+  (Chunked and whole-prompt prefill are distinct float paths — chunked
+  attention reads earlier chunks back from the bf16 KV ring, flash prefill
+  never rounds through the cache — so each admission path is compared
+  against its own solo form.)
 * **Fixed served model** — the paper's stochastic-shift weight quantizer
   makes the dequantized weights a function of the gather key, so the
-  scheduler uses ONE ``gather_key`` for every prefill and decode step.
-  Interleaved requests sit at different global step indices; any per-step
-  key schedule would decode them against different weights than a solo run.
+  scheduler uses ONE ``gather_key`` for every prefill chunk and decode
+  step.  Chunked prefill folds the same per-layer keys as whole-prompt
+  prefill, so both paths dequantize bit-identical weights.
 * **Reproducible sampling** — per-request sampling streams are keyed by
   ``fold_in(PRNGKey(request.seed), position)``, a pure function of the
   request itself, so temperature/top-k outputs are identical across runs
@@ -43,9 +72,10 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from ..models.decode import DecodeSpec
+from ..models.decode import CHUNKED_PREFILL_ARCHS, DecodeSpec
 from ..models.transformer import Model
-from .engine import ServeEngine, make_sample_params
+from .engine import (ServeEngine, make_sample_params, prefill_bucket_for,
+                     prefill_bucket_sizes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,16 +112,21 @@ class CompletedRequest:
     rid: str
     tokens: np.ndarray  # (n_generated,) int32, includes the EOS if hit
     submit_step: int  # scheduler decode-step count at submit()
-    admit_step: int  # ... when the prompt was prefilled into a slot
+    admit_step: int  # ... when the request entered a slot (chunked: when
+    # assignment started; blocking: when the prompt was prefilled)
     finish_step: int  # ... when the last token was produced
     submit_time: float
     finish_time: float
+    first_token_step: int = 0  # ... when token 0 (the prefill token) landed
+    first_token_time: float = 0.0  # wall clock of token 0 (TTFT source)
 
 
 @dataclasses.dataclass
 class _Slot:
     req: Request
     n_out: int  # tokens generated so far (incl. the prefill token)
+    pf_off: int = 0  # prompt tokens already prefilled (chunked admission)
+    prefilling: bool = False  # True until the last chunk lands
 
 
 @partial(jax.jit, donate_argnums=(0,))
@@ -120,12 +155,22 @@ class ContinuousScheduler:
     batch_builder:
         ``tokens (1, s) -> (batch dict, batch pspecs)`` for architectures
         whose prefill needs modality stubs (vlm/audio); defaults to a
-        tokens-only batch.
+        tokens-only batch.  Blocking admission only.
+    prefill_chunk:
+        0 (default) = blocking batch-of-1 admission; C > 0 = chunked
+        admission, at most C prompt tokens prefilled per scheduler step per
+        slot (see module docstring).
+    prefill_buckets:
+        bucket count for chunk right-padding (bounds the chunked jit cache).
+    prefill_interleave:
+        chunk launches per scheduler step (fairness knob; default 1).
     """
 
     def __init__(self, model: Model, mesh, spec: DecodeSpec, params: dict,
                  gather_key: Optional[jax.Array] = None,
-                 batch_builder: Optional[Callable] = None):
+                 batch_builder: Optional[Callable] = None,
+                 prefill_chunk: int = 0, prefill_buckets: int = 4,
+                 prefill_interleave: int = 1):
         self.model = model
         self.mesh = mesh
         self.spec = spec
@@ -135,8 +180,25 @@ class ContinuousScheduler:
                            else jax.random.PRNGKey(0))
         self.batch_builder = batch_builder or self._default_batch
         self.engine = ServeEngine(model, mesh, spec, params=params)
-        # batch-of-1 prefill engine: prompts prefill at their exact length
-        # (one retrace per distinct length), into the same ring layout
+        self.prefill_chunk = int(prefill_chunk)
+        if self.prefill_chunk < 0:
+            raise ValueError(
+                f"prefill_chunk must be >= 0 (0 = blocking admission), "
+                f"got {prefill_chunk}")
+        self.prefill_interleave = max(int(prefill_interleave), 1)
+        if self.prefill_chunk:
+            if model.cfg.arch_type not in CHUNKED_PREFILL_ARCHS:
+                raise ValueError(
+                    f"prefill_chunk requires an arch in "
+                    f"{CHUNKED_PREFILL_ARCHS}; {model.cfg.arch_type!r} "
+                    "prefills whole-prompt (prefill_chunk=0)")
+            self.buckets = prefill_bucket_sizes(
+                self.prefill_chunk, prefill_buckets, spec.cache_len)
+        else:
+            self.buckets = ()
+        # batch-of-1 prefill engine (blocking admission): prompts prefill at
+        # their exact length (one retrace per distinct length), into the
+        # same ring layout
         self._pf_spec = dataclasses.replace(spec, batch_global=1,
                                             batch_sharded=False)
         self.prefill_engine = ServeEngine(model, mesh, self._pf_spec,
@@ -145,19 +207,24 @@ class ContinuousScheduler:
         self.cache = self.engine.init_cache()
         self.queue: deque[Request] = deque()
         self.slots: list[Optional[_Slot]] = [None] * self.B
-        # per-slot device-step state (host mirrors; assembled each step)
+        # per-slot device-step state (host mirrors; assembled each step);
+        # every lane starts at the dead sentinel
         self.tok = np.zeros(self.B, np.int32)
-        self.pos = np.zeros(self.B, np.int32)
+        self.pos = np.full(self.B, -1, np.int32)
         self.temp = np.zeros(self.B, np.float32)
-        self.top_k = np.zeros(self.B, np.int32)
+        self.top_k = np.ones(self.B, np.int32)
         self.keys = np.zeros((self.B, 2), np.uint32)
         self._submit_meta: dict[str, tuple[int, float]] = {}
         self._admit_step: dict[str, int] = {}
+        self._first_token: dict[str, tuple[int, float]] = {}
         self._out: dict[str, list[int]] = {}
         self.finished: dict[str, CompletedRequest] = {}
         # stats
         self.step_count = 0
         self.prefill_count = 0
+        self.prefill_chunk_count = 0
+        self._pf_shapes: set[int] = set()  # distinct compiled prefill shapes
+        self._max_pf_tokens = 0  # longest single prefill launch (seq tokens)
         self.occupancy_sum = 0
         self.tokens_generated = 0
 
@@ -194,6 +261,22 @@ class ContinuousScheduler:
     def n_active(self) -> int:
         return sum(s is not None for s in self.slots)
 
+    def _clear_lane(self, slot_i: int) -> None:
+        """Dead-lane sentinel: pos -1 masks the lane's KV write and zeroes
+        its attention; temp 0 / top-k 1 take the draw-free greedy path."""
+        self.tok[slot_i] = 0
+        self.pos[slot_i] = -1
+        self.temp[slot_i] = 0.0
+        self.top_k[slot_i] = 1
+        self.keys[slot_i] = 0
+
+    def _arm_lane(self, slot_i: int, req: Request, first_pos: int) -> None:
+        """Slot enters the decoding phase at position `first_pos`."""
+        self.pos[slot_i] = first_pos
+        self.temp[slot_i] = req.temperature
+        self.top_k[slot_i] = req.top_k
+        self.keys[slot_i] = np.asarray(jax.random.PRNGKey(req.seed), np.uint32)
+
     def _emit(self, events: list, slot_i: int, token: int) -> None:
         """Record one generated token for the slot's request; retire the
         slot when the request is done."""
@@ -202,11 +285,14 @@ class ContinuousScheduler:
         self._out[req.rid].append(token)
         st.n_out += 1
         self.tokens_generated += 1
+        if st.n_out == 1:
+            self._first_token[req.rid] = (self.step_count, time.perf_counter())
         done = (st.n_out >= req.max_new_tokens
                 or (req.eos_id is not None and token == req.eos_id))
         events.append(TokenEvent(req.rid, token, st.n_out - 1, done))
         if done:
             submit_step, submit_time = self._submit_meta.pop(req.rid)
+            ft_step, ft_time = self._first_token.pop(req.rid)
             self.finished[req.rid] = CompletedRequest(
                 rid=req.rid,
                 tokens=np.asarray(self._out.pop(req.rid), np.int32),
@@ -215,51 +301,148 @@ class ContinuousScheduler:
                 finish_step=self.step_count,
                 submit_time=submit_time,
                 finish_time=time.perf_counter(),
+                first_token_step=ft_step,
+                first_token_time=ft_time,
             )
             self.slots[slot_i] = None
-            self.temp[slot_i] = 0.0
-            self.top_k[slot_i] = 0
+            self._clear_lane(slot_i)
         else:
             self.tok[slot_i] = token
 
-    def _admit(self, events: list) -> None:
+    # -- blocking admission (prefill_chunk == 0) -----------------------------
+
+    def _admit_blocking(self, events: list) -> None:
         """Prefill queued requests into free slots (batch-of-1 prefill, then
-        splice the slot cache lane in place)."""
+        splice the slot cache lane in place).  Each pass dispatches every
+        free slot's prefill asynchronously and host-syncs the produced
+        tokens ONCE; the outer loop re-scans for slots freed by their own
+        prefill token (max_new_tokens == 1 / instant EOS) so a retirement
+        never leaves a lane idle while the queue is non-empty."""
+        while self.queue:
+            free = self._free_slots()
+            if not free:
+                return
+            admitted: list[tuple[int, jax.Array]] = []
+            for slot_i in free:
+                if not self.queue:
+                    break
+                req = self.queue.popleft()
+                s = len(req.prompt)
+                tokens = np.asarray(req.prompt, np.int32)[None, :]
+                batch, pspecs = self.batch_builder(tokens)
+                extra = ()
+                if self.spec.sampling:
+                    extra = (make_sample_params(req.temperature, req.top_k,
+                                                req.seed),)
+                nxt1, cache1 = self.prefill_engine.prefill_step(pspecs)(
+                    self.params, batch, self.gather_key, *extra)
+                self.prefill_count += 1
+                self._pf_shapes.add(s)
+                self._max_pf_tokens = max(self._max_pf_tokens, s)
+                self.cache = _splice_slot(self.cache, cache1,
+                                          jnp.asarray(slot_i, jnp.int32))
+                self.slots[slot_i] = _Slot(req=req, n_out=0)
+                self._admit_step[req.rid] = self.step_count
+                # slot decode state: the prefill token is fed at position s
+                self._arm_lane(slot_i, req, s)
+                admitted.append((slot_i, nxt1))
+            if not admitted:
+                return
+            # ONE host sync for the whole pass (the prefills above were all
+            # dispatched without a device round-trip between them)
+            toks = jax.device_get([t for _, t in admitted])
+            for (slot_i, _), t in zip(admitted, toks):
+                self._emit(events, slot_i, int(np.asarray(t)[0]))
+
+    # -- chunked admission (prefill_chunk > 0) -------------------------------
+
+    def _assign_slots(self) -> None:
+        """Move queued requests into free slots as `prefilling` occupants;
+        no model work happens here — chunks run in :meth:`_chunk_pass`."""
         for slot_i in self._free_slots():
             if not self.queue:
                 return
             req = self.queue.popleft()
-            s = len(req.prompt)
-            tokens = np.asarray(req.prompt, np.int32)[None, :]
-            batch, pspecs = self.batch_builder(tokens)
-            key_data = np.asarray(jax.random.PRNGKey(req.seed), np.uint32)
+            self.slots[slot_i] = _Slot(req=req, n_out=0, prefilling=True)
+            self._admit_step[req.rid] = self.step_count
+            # the lane keeps the dead sentinel until its last chunk lands
+
+    def _chunk_pass(self, events: list) -> None:
+        """Advance every prefilling slot by one chunk per launch, at most
+        ``prefill_interleave`` launches this step.  All concurrently
+        prefilling slots' chunks ride ONE pooled launch, right-padded to
+        the smallest shared bucket; lanes whose chunk completes the prompt
+        stream their prefill token (one batched host sync) and start
+        decoding this very step."""
+        for _ in range(self.prefill_interleave):
+            lanes = [i for i, s in enumerate(self.slots)
+                     if s is not None and s.prefilling]
+            if not lanes:
+                return
+            clen = {i: min(self.prefill_chunk,
+                           len(self.slots[i].req.prompt) - self.slots[i].pf_off)
+                    for i in lanes}
+            bucket = prefill_bucket_for(max(clen.values()), self.buckets)
+            tokens = np.zeros((self.B, bucket), np.int32)
+            offset = np.zeros(self.B, np.int32)
+            n_valid = np.zeros(self.B, np.int32)
+            temp = np.zeros(self.B, np.float32)
+            top_k = np.ones(self.B, np.int32)
+            keys = np.zeros((self.B, 2), np.uint32)
+            for i in lanes:
+                st = self.slots[i]
+                tokens[i, :clen[i]] = st.req.prompt[st.pf_off:st.pf_off + clen[i]]
+                offset[i] = st.pf_off
+                n_valid[i] = clen[i]
+                temp[i] = st.req.temperature
+                top_k[i] = st.req.top_k
+                keys[i] = np.asarray(jax.random.PRNGKey(st.req.seed), np.uint32)
             extra = ()
             if self.spec.sampling:
-                extra = (make_sample_params(req.temperature, req.top_k,
-                                            req.seed),)
-            nxt1, cache1 = self.prefill_engine.prefill_step(pspecs)(
-                self.params, batch, self.gather_key, *extra)
-            self.prefill_count += 1
-            self.cache = _splice_slot(self.cache, cache1,
-                                      jnp.asarray(slot_i, jnp.int32))
-            self.slots[slot_i] = _Slot(req=req, n_out=0)
-            self._admit_step[req.rid] = self.step_count
-            # slot decode state: the prefill token is fed at position s
-            self.pos[slot_i] = s
-            self.temp[slot_i] = req.temperature
-            self.top_k[slot_i] = req.top_k
-            self.keys[slot_i] = key_data
-            self._emit(events, slot_i, int(jax.device_get(nxt1)[0]))
+                extra = ({"temp": jnp.asarray(temp),
+                          "top_k": jnp.asarray(top_k),
+                          "key": jnp.asarray(keys)},)
+            nxt, self.cache = self.engine.prefill_chunk_step(bucket)(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(offset), jnp.asarray(n_valid), self.gather_key,
+                *extra)
+            self.prefill_chunk_count += 1
+            self._pf_shapes.add(bucket)
+            self._max_pf_tokens = max(self._max_pf_tokens, bucket)
+            finishing = []
+            for i in lanes:
+                st = self.slots[i]
+                st.pf_off += clen[i]
+                if st.pf_off >= len(st.req.prompt):
+                    finishing.append(i)
+            if finishing:
+                toks = np.asarray(jax.device_get(nxt))  # one sync per launch
+                for i in finishing:
+                    st = self.slots[i]
+                    st.prefilling = False
+                    self.prefill_count += 1
+                    self._arm_lane(i, st.req, len(st.req.prompt))
+                    self._emit(events, i, int(toks[i]))
+                # a prefill token may retire its request instantly; refill
+                # the freed lanes so they start prefilling next launch
+                self._assign_slots()
 
     # -- the scheduler loop --------------------------------------------------
 
     def step(self) -> list[TokenEvent]:
-        """Admit pending requests into free slots, then run ONE pooled decode
-        step.  Returns the tokens streamed this step (admission may also
-        stream each admitted request's first, prefill-produced token)."""
+        """Admit pending requests, then run ONE pooled decode step.  Under
+        chunked admission the admit phase runs at most `prefill_interleave`
+        chunk launches; under blocking admission it prefills whole prompts
+        into every free slot.  Returns the tokens streamed this step
+        (admission may also stream admitted requests' first tokens)."""
         events: list[TokenEvent] = []
-        self._admit(events)
-        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if self.prefill_chunk:
+            self._assign_slots()
+            self._chunk_pass(events)
+        else:
+            self._admit_blocking(events)
+        active = [i for i, s in enumerate(self.slots)
+                  if s is not None and not s.prefilling]
         if not active:
             return events
         extra = ()
@@ -297,6 +480,16 @@ class ContinuousScheduler:
         return {
             "decode_steps": self.step_count,
             "prefills": self.prefill_count,
+            "prefill_chunks": self.prefill_chunk_count,
+            # distinct prefill shapes this scheduler compiled: bucket
+            # lengths when chunked (bounded by len(self.buckets)), distinct
+            # prompt lengths when blocking (unbounded — the bug chunking
+            # fixes); bench_serve asserts on it in CI
+            "prefill_traces": len(self._pf_shapes),
+            # longest prompt-token stretch a single prefill launch processed
+            # while live slots waited: the whole prompt under blocking
+            # admission, at most one (padded) chunk under chunked admission
+            "max_prefill_launch_tokens": self._max_pf_tokens,
             "tokens_generated": self.tokens_generated,
             "slots": self.B,
             "mean_occupancy": (self.occupancy_sum / self.step_count
