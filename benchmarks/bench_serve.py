@@ -103,6 +103,25 @@ def make_trace(rng, n_requests, arrival_rate, prompt_lens, gen_lens, vocab,
     return trace
 
 
+def make_prefix_trace(rng, n_requests, arrival_rate, sys_len, tail_lens,
+                      gen_lens, vocab):
+    """Repeated-system-prompt load: every request's prompt = one fixed
+    `sys_len`-token system prefix + a distinct random tail — the dominant
+    real traffic shape, and the one the paged pool's prefix sharing is
+    for."""
+    system = rng.integers(0, vocab, size=sys_len).tolist()
+    trace = []
+    step = 0
+    for i in range(n_requests):
+        step += int(rng.exponential(1.0 / arrival_rate))
+        tail = rng.integers(0, vocab,
+                            size=int(tail_lens[i % len(tail_lens)])).tolist()
+        trace.append((step, Request(
+            rid=f"sys{i:03d}", prompt=system + tail,
+            max_new_tokens=int(rng.choice(gen_lens)), seed=i)))
+    return trace
+
+
 def replay(sched, trace, max_steps=100_000):
     """Drive the scheduler through the arrival trace: requests are submitted
     when the scheduler's decode-step clock (relative to replay start)
@@ -129,18 +148,23 @@ def replay(sched, trace, max_steps=100_000):
 
 
 def bench_variant(name, qsdp, rowquant, mcfg, trace, slots,
-                  prefill_chunk=0, prefill_buckets=4):
+                  prefill_chunk=0, prefill_buckets=4, kv_block_size=0,
+                  kv_quant_bits=0, kv_quant_horizon=0, kv_prefix_share=True):
     prompt_lens = sorted({len(r.prompt) for _, r in trace})
     gen0 = trace[0][1].max_new_tokens
     setup = build_serve_setup(
         mcfg, data_par=2, model_par=4, qsdp=qsdp, batch=slots,
         prompt_len=max(prompt_lens),
-        gen=max(r.max_new_tokens for _, r in trace), rowquant_mlp=rowquant)
+        gen=max(r.max_new_tokens for _, r in trace), rowquant_mlp=rowquant,
+        kv_block_size=kv_block_size)
     sched = ContinuousScheduler(setup.model, setup.mesh, setup.spec,
                                 setup.params,
                                 gather_key=jax.random.PRNGKey(42),
                                 prefill_chunk=prefill_chunk,
-                                prefill_buckets=prefill_buckets)
+                                prefill_buckets=prefill_buckets,
+                                kv_quant_bits=kv_quant_bits,
+                                kv_quant_horizon=kv_quant_horizon,
+                                kv_prefix_share=kv_prefix_share)
 
     # warmup: compile decode + one prefill per distinct prompt length
     # (blocking) / per chunk bucket (chunked: one prompt of each bucket
@@ -193,7 +217,19 @@ def bench_variant(name, qsdp, rowquant, mcfg, trace, slots,
         "prefill_launches": int((st["prefill_chunks"] or st["prefills"])
                                 - (base["prefill_chunks"] or base["prefills"])),
         "max_prefill_launch_tokens": int(st["max_prefill_launch_tokens"]),
-    }, {rid: c.tokens.tolist() for rid, c in done.items()}
+        # paged-pool columns (0 / 0.0 under ring serving)
+        "blocks_in_use": int(st.get("blocks_in_use", 0)),
+        "blocks_cached": int(st.get("blocks_cached", 0)),
+        "prefix_hit_rate": round(float(st.get("prefix_hit_rate", 0.0)), 3),
+        "effective_capacity": float(st.get("effective_capacity", 0.0)),
+        "cold_blocks": int(st.get("cold_blocks", 0)),
+        "cold_bytes": int(st.get("cold_bytes", 0)),
+        "hot_block_bytes": int(st.get("hot_block_bytes", 0)),
+        "cold_compression": round(float(st.get("cold_compression", 1.0)), 2),
+        "cow_forks": int(st.get("cow_forks", 0)),
+        "demotions": int(st.get("demotions", 0)),
+        "rehydrations": int(st.get("rehydrations", 0)),
+    }, {rid: c.tokens.tolist() for rid, c in done.items()}, sched
 
 
 def main(argv=None):
@@ -217,11 +253,15 @@ def main(argv=None):
         # long-prompt trace: >= 8 distinct lengths, prompts several chunks
         # long — the retrace + head-of-line-blocking regime
         long_lens, long_n = tuple(range(9, 17)), 8
+        # repeated-system-prompt trace (paged prefix sharing)
+        sys_len, tail_lens, sys_n = 16, (3, 5, 7, 9, 11, 13), 8
     else:
         dims = dict(n_layers=4, d_model=256, d_ff=512)
         n_requests = args.requests or 24
         prompt_lens, gen_lens = (16, 32, 48), (8, 16, 24)
         long_lens, long_n = tuple(range(33, 64, 3)), 16
+        sys_len, tail_lens, sys_n = 32, tuple(range(5, 40, 5)), 12
+    kv_bs = 8  # paged block size (divides sys_len and the chunk size)
 
     mcfg = ModelConfig(name="bench-serve", arch_type="dense",
                        n_layers=dims["n_layers"], d_model=dims["d_model"],
@@ -238,6 +278,7 @@ def main(argv=None):
                       "long_prompt_lens": list(long_lens),
                       "prefill_chunk": args.prefill_chunk,
                       "prefill_buckets": args.prefill_buckets,
+                      "kv_block_size": kv_bs, "sys_prompt_len": sys_len,
                       "smoke": bool(args.smoke)},
            "variants": {}}
     outputs = {}
@@ -254,8 +295,8 @@ def main(argv=None):
               f"gather {r['gather_bytes_per_decode_step'] / 2**20:.2f} MiB/step")
 
     for name, v in variants().items():
-        r, toks = bench_variant(name, v["qsdp"], v["rowquant"], mcfg,
-                                trace, args.slots)
+        r, toks, _ = bench_variant(name, v["qsdp"], v["rowquant"], mcfg,
+                                   trace, args.slots)
         out["variants"][name] = r
         outputs[name] = toks
         show(name, r)
@@ -268,10 +309,10 @@ def main(argv=None):
                             mcfg.vocab_size, cycle_lens=True)
     for name, chunk in (("qsdp-longprompt", 0),
                         ("qsdp-chunked", args.prefill_chunk)):
-        r, toks = bench_variant(name, QSDPConfig(min_quant_size=256), False,
-                                mcfg, long_trace, args.slots,
-                                prefill_chunk=chunk,
-                                prefill_buckets=args.prefill_buckets)
+        r, toks, _ = bench_variant(name, QSDPConfig(min_quant_size=256), False,
+                                   mcfg, long_trace, args.slots,
+                                   prefill_chunk=chunk,
+                                   prefill_buckets=args.prefill_buckets)
         out["variants"][name] = r
         outputs[name] = toks
         show(name, r)
@@ -328,6 +369,77 @@ def main(argv=None):
         assert (chk["max_prefill_launch_tokens"]
                 < blk["max_prefill_launch_tokens"]), (chk, blk)
 
+    # paged KV pool on a repeated-system-prompt trace: sharing OFF vs ON
+    # over the SAME paged float path (block indirection preserves every
+    # value, so the A/B isolates the prefix cache), then the quantized cold
+    # tier on top.  CI tripwires: sharing engages (hit rate > 0, fewer
+    # prefill launches at identical tokens) and the cold tier re-encodes
+    # idle prefix blocks at ~4x fewer resident bytes, tokens unchanged.
+    sys_trace = make_prefix_trace(np.random.default_rng(2), sys_n,
+                                  args.arrival_rate / 3, sys_len, tail_lens,
+                                  gen_lens, mcfg.vocab_size)
+    paged_rows = {}
+    for name, share, qbits in (("qsdp-paged-noshare", False, 0),
+                               ("qsdp-paged", True, 0),
+                               ("qsdp-paged-cold", True, 4)):
+        r, toks, sched = bench_variant(
+            name, QSDPConfig(min_quant_size=256), False, mcfg, sys_trace,
+            args.slots, prefill_chunk=args.prefill_chunk,
+            prefill_buckets=args.prefill_buckets, kv_block_size=kv_bs,
+            kv_prefix_share=share, kv_quant_bits=qbits,
+            kv_quant_horizon=16 if qbits else 0)
+        out["variants"][name] = r
+        outputs[name] = toks
+        paged_rows[name] = (r, sched)
+        show(name, r)
+    nosh = out["variants"]["qsdp-paged-noshare"]
+    shr = out["variants"]["qsdp-paged"]
+    assert outputs["qsdp-paged"] == outputs["qsdp-paged-noshare"], \
+        "prefix sharing changed a request's tokens"
+    assert shr["prefix_hit_rate"] > 0, shr
+    assert shr["prefill_launches"] < nosh["prefill_launches"], (shr, nosh)
+    assert outputs["qsdp-paged-cold"] == outputs["qsdp-paged"], \
+        "the quantized cold tier changed a request's tokens"
+
+    # cold-tier capacity: the replay itself never demotes (the horizon
+    # outlasts any mid-replay idle gap, which is why the token equality
+    # above is exact).  Now idle the retired system blocks past the horizon
+    # with a filler request, demote them into wire codes (~4x fewer
+    # resident bytes), then resubmit the system prompt twice: the first hit
+    # rehydrates from the cold store (rehydrations > 0); the second reads
+    # the same rehydrated block hot and must reproduce the first's tokens
+    # bit-for-bit — a demoted prefix serves DETERMINISTIC streams (the
+    # codec is lossy 4-bit QDQ, so the rehydrated stream is its own
+    # reference, not the full-precision row's).
+    sched_cold = paged_rows["qsdp-paged-cold"][1]
+    sched_cold.submit(Request(rid="cold-filler", prompt=[7, 8, 9],
+                              max_new_tokens=24, seed=0))
+    sched_cold.run()
+    st_cold = sched_cold.stats()
+    assert st_cold["demotions"] > 0, st_cold
+    assert st_cold["cold_blocks"] > 0, st_cold
+    hot_resident = st_cold["hot_block_bytes"] * st_cold["cold_blocks"]
+    cold_ratio = hot_resident / max(st_cold["cold_bytes"], 1)
+    assert cold_ratio > 3.0, (hot_resident, st_cold["cold_bytes"])
+    req0 = sys_trace[0][1]
+    redo = []
+    for rid in ("cold-re", "cold-re2"):
+        sched_cold.submit(Request(rid=rid, prompt=req0.prompt,
+                                  max_new_tokens=req0.max_new_tokens,
+                                  seed=req0.seed))
+        redo.append(sched_cold.run()[rid].tokens.tolist())
+    st_cold = sched_cold.stats()
+    assert st_cold["rehydrations"] > 0, st_cold
+    assert redo[0] == redo[1], \
+        "rehydrated prefix served two identical requests different tokens"
+    sched_cold.pool.check_invariants()
+    out["variants"]["qsdp-paged-cold"].update(
+        cold_blocks=int(st_cold["cold_blocks"]),
+        cold_bytes=int(st_cold["cold_bytes"]),
+        demotions=int(st_cold["demotions"]),
+        rehydrations=int(st_cold["rehydrations"]),
+        cold_compression=round(cold_ratio, 2))
+
     out["summary"] = {
         "gather_bytes_ratio_qsdp_vs_baseline": q / b,
         "gather_bytes_ratio_rowquant_vs_baseline": rq / b,
@@ -343,6 +455,13 @@ def main(argv=None):
         "blocking_max_prefill_launch_tokens": blk["max_prefill_launch_tokens"],
         "ttft_p95_ratio_chunked_vs_blocking": (
             round(chk["ttft_s_p95"] / max(blk["ttft_s_p95"], 1e-9), 3)),
+        "paged_matches_noshare_tokens": True,
+        "paged_prefix_hit_rate": shr["prefix_hit_rate"],
+        "paged_prefill_launches": shr["prefill_launches"],
+        "noshare_prefill_launches": nosh["prefill_launches"],
+        "cold_matches_paged_tokens": True,
+        "cold_compression": round(cold_ratio, 2),
+        "cold_blocks": int(st_cold["cold_blocks"]),
     }
     print(f"qsdp ships {out['summary']['gather_bytes_ratio_qsdp_vs_baseline']:.3f}x "
           f"the baseline gather bytes per decode step at equal tokens")
@@ -351,6 +470,11 @@ def main(argv=None):
           f"prompt lengths; per-launch stall {chk['max_prefill_launch_tokens']}"
           f" vs {blk['max_prefill_launch_tokens']} tokens; "
           f"ttft p95 {chk['ttft_s_p95']:.3f}s vs {blk['ttft_s_p95']:.3f}s")
+    print(f"paged pool: prefix hit rate {shr['prefix_hit_rate']:.2f}, "
+          f"{shr['prefill_launches']} prefill launches vs "
+          f"{nosh['prefill_launches']} unshared at identical tokens; cold "
+          f"tier holds {st_cold['cold_blocks']} blocks at "
+          f"{cold_ratio:.1f}x fewer resident bytes")
 
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)

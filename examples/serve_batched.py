@@ -25,6 +25,11 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--baseline", action="store_true")
+    ap.add_argument("--kv-block-size", type=int, default=0,
+                    help="paged KV pool block size (0 = per-slot ring); "
+                         "paged serving prefills in chunks")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="chunk size when --kv-block-size is set")
     args = ap.parse_args()
 
     dp, tp = (2, 4) if len(jax.devices()) >= 8 else (1, 1)
@@ -32,7 +37,8 @@ def main():
             else QSDPConfig(min_quant_size=1024))
     setup = build_serve_setup(args.arch, data_par=dp, model_par=tp, smoke=True,
                               qsdp=qsdp, batch=args.batch,
-                              prompt_len=args.prompt_len, gen=args.gen)
+                              prompt_len=args.prompt_len, gen=args.gen,
+                              kv_block_size=args.kv_block_size)
     cfg, eng, params = setup.cfg, setup.engine, setup.params
 
     # per-decode-step wire bytes: ONE quantized gather per parameter
@@ -45,19 +51,29 @@ def main():
     tokens, _ = data.sample(0)
     prompt, pspecs = make_prompt_batch(cfg, setup.spec, setup.ms, tokens)
 
+    kw, bt = {}, ()
+    if setup.spec.paged:
+        # paged pool: chunked prefill + fixed gather key; the solo path
+        # lays each lane out on the identity block table
+        kw = dict(prefill_chunk=args.prefill_chunk, fold_step_keys=False)
+        bps = setup.spec.blocks_per_slot
+        bt = (jnp.arange(args.batch * bps,
+                         dtype=jnp.int32).reshape(args.batch, bps),)
     with setup.mesh:
         t0 = time.time()
-        out = eng.generate(params, prompt, pspecs, n_tokens=args.gen)
+        out = eng.generate(params, prompt, pspecs, n_tokens=args.gen, **kw)
         out.block_until_ready()
         t_total = time.time() - t0
         # steady-state decode rate (re-run decode only)
         dec = eng.decode_step()
         cache = eng.init_cache()
         nxt = out[:, -1]
+        key0 = jax.random.PRNGKey(0)
         t1 = time.time()
         for i in range(8):
             pos = jnp.full((args.batch,), args.prompt_len + i, jnp.int32)
-            nxt, cache = dec(params, cache, nxt, pos, jax.random.PRNGKey(i))
+            k = key0 if setup.spec.paged else jax.random.PRNGKey(i)
+            nxt, cache = dec(params, cache, nxt, pos, *bt, k)
         nxt.block_until_ready()
         rate = 8 * args.batch / (time.time() - t1)
     print(f"generated {args.batch}x{args.gen} tokens in {t_total:.2f}s "

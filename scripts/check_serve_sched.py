@@ -158,5 +158,62 @@ for arch_kw in (dict(arch_type="dense", n_layers=2, d_model=64,
             for r in reqs4)
         check("sched-chunked-bucket-gt-sloc", ok)
 
+        # paged KV block pool: every block is sequence-sharded over the
+        # 4-way model axis, so block-table gathers and the drop-scatter
+        # writes cross shard boundaries on every step.  Greedy + sampled
+        # tokens must bit-match the solo batch-of-1 paged run (identity
+        # block table, same chunk decomposition), and prefix sharing on a
+        # repeated system prompt must engage without changing ANY token
+        # (share vs no-share is the same paged float path).
+        pspec = DecodeSpec(cache_len=RING, batch_global=4,
+                           batch_sharded=False, sampling=True,
+                           kv_block_size=8)
+        solo_p = ServeEngine(m, mesh, DecodeSpec(
+            cache_len=RING, batch_global=1, batch_sharded=False,
+            sampling=True, kv_block_size=8))
+        system = rng.integers(0, VOCAB, size=8).tolist()
+        reqs5 = [Request(rid=f"pg{i}",
+                         prompt=system
+                         + rng.integers(0, VOCAB, size=tail).tolist(),
+                         max_new_tokens=int(g), temperature=t, top_k=k,
+                         seed=100 + i)
+                 for i, (tail, g, t, k) in enumerate(
+                     [(3, 4, 0.0, 0), (5, 3, 0.9, 4), (7, 5, 0.0, 0),
+                      (2, 3, 0.0, 0), (9, 4, 1.2, 0), (4, 2, 0.0, 0)])]
+        outs, hits = {}, 0
+        for share in (True, False):
+            s5 = ContinuousScheduler(m, mesh, pspec, params,
+                                     gather_key=GATHER_KEY,
+                                     prefill_chunk=8, prefill_buckets=3,
+                                     kv_prefix_share=share)
+            for r in reqs5:
+                s5.submit(Request(rid=r.rid, prompt=r.prompt,
+                                  max_new_tokens=r.max_new_tokens,
+                                  temperature=r.temperature, top_k=r.top_k,
+                                  seed=r.seed))
+            outs[share] = s5.run()
+            s5.pool.check_invariants()
+            if share:
+                hits = s5.stats()["prefix_hits"]
+        worst = ""
+        ok = True
+        for r in reqs5:
+            sample = make_sample_params(r.temperature, r.top_k, r.seed)
+            ref = np.asarray(jax.device_get(solo_p.generate(
+                params,
+                {"tokens": jnp.asarray(np.asarray(r.prompt, np.int32)[None])},
+                {"tokens": P(None)}, n_tokens=r.max_new_tokens,
+                key=GATHER_KEY, sample=sample, fold_step_keys=False,
+                prefill_chunk=8, prefill_buckets=3)))[0]
+            if not np.array_equal(outs[True][r.rid].tokens, ref):
+                ok = False
+                worst = (f"{r.rid}: got={outs[True][r.rid].tokens.tolist()} "
+                         f"ref={ref.tolist()}")
+        check("sched-paged-vs-solo-dense", ok, worst)
+        check("sched-paged-share-invariant",
+              all(np.array_equal(outs[True][r.rid].tokens,
+                                 outs[False][r.rid].tokens)
+                  for r in reqs5) and hits > 0, f"prefix_hits={hits}")
+
 print("ALL-OK" if not FAIL else f"FAILED: {FAIL}")
 sys.exit(0 if not FAIL else 1)

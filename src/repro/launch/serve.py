@@ -62,6 +62,21 @@ def parse_args(argv=None):
     ap.add_argument("--prefill-interleave", type=int, default=1,
                     help="--continuous: chunk launches per scheduler step "
                          "(fairness knob; 1 = maximally decode-fair)")
+    # paged KV pool flags
+    ap.add_argument("--kv-block-size", type=int, default=0,
+                    help="paged KV pool block size in tokens (0 = per-slot "
+                         "ring; > 0 requires --prefill-chunk and enables "
+                         "prefix sharing)")
+    ap.add_argument("--kv-pool-blocks", type=int, default=0,
+                    help="physical KV blocks in the pool (0 = one full "
+                         "logical window per slot)")
+    ap.add_argument("--kv-quant-bits", type=int, default=0,
+                    help="--continuous paged: re-encode idle cached prefix "
+                         "blocks into the core.quant wire format at this "
+                         "bit width (0 = cold tier off)")
+    ap.add_argument("--kv-quant-horizon", type=int, default=64,
+                    help="--continuous paged: idle scheduler steps before a "
+                         "cached block demotes to the cold tier")
     return ap.parse_args(argv)
 
 
@@ -71,7 +86,9 @@ def run_continuous(setup, args) -> int:
         setup, gather_key=jax.random.PRNGKey(args.seed),
         prefill_chunk=args.prefill_chunk,
         prefill_buckets=args.prefill_buckets,
-        prefill_interleave=args.prefill_interleave)
+        prefill_interleave=args.prefill_interleave,
+        kv_quant_bits=args.kv_quant_bits if args.kv_block_size else 0,
+        kv_quant_horizon=args.kv_quant_horizon)
     # mixed prompt/gen lengths, seeded: realistic heavy-traffic shape
     for i in range(args.requests):
         plen = int(rng.integers(max(args.prompt_len // 2, 1), args.prompt_len + 1))
@@ -98,6 +115,12 @@ def run_continuous(setup, args) -> int:
         print(f"# chunked prefill: chunk={args.prefill_chunk} "
               f"buckets={sched.buckets} -> {st['prefill_chunks']} chunk "
               f"launches, {st['prefill_traces']} compiled prefill shapes")
+    if sched.pool is not None:
+        print(f"# paged KV pool: {st['blocks_total']} blocks x "
+              f"{setup.spec.kv_block_size} tok, prefix hit rate "
+              f"{st['prefix_hit_rate']:.2f}, cow forks {st['cow_forks']}, "
+              f"cold blocks {st['cold_blocks']} "
+              f"(effective capacity {st['effective_capacity']:.0f} blocks)")
     print(f"# decode-step weight gathers = "
           f"{setup.decode_gather_bytes() / 2**20:.2f} MiB/device")
     first = done[sorted(done)[0]]
@@ -110,10 +133,15 @@ def run_batch(setup, args) -> int:
                        global_batch=args.batch, seed=args.seed)
     tokens, _ = data.sample(0)
     prompt, pspecs = make_prompt_batch(setup.cfg, setup.spec, setup.ms, tokens)
+    kw = {}
+    if setup.spec.paged:
+        # paged serving admits through chunked prefill, which serves a
+        # FIXED quantized model (one gather key)
+        kw = dict(prefill_chunk=args.prefill_chunk, fold_step_keys=False)
     t0 = time.time()
     with setup.mesh:
         out = setup.engine.generate(setup.params, prompt, pspecs,
-                                    n_tokens=args.gen)
+                                    n_tokens=args.gen, **kw)
     out.block_until_ready()
     dt = time.time() - t0
     print(f"# {setup.cfg.name} generated {args.batch}x{args.gen} tokens in {dt:.2f}s "
@@ -126,11 +154,16 @@ def main(argv=None):
     args = parse_args(argv)
     qsdp = (QSDPConfig.baseline() if args.baseline
             else QSDPConfig(weight_bits=args.wbits))
+    if args.kv_block_size and not args.prefill_chunk:
+        raise SystemExit("--kv-block-size requires --prefill-chunk (paged "
+                         "serving admits through chunked prefill)")
     setup = build_serve_setup(
         args.arch, data_par=args.data_par, model_par=args.model_par,
         smoke=args.smoke, qsdp=qsdp, batch=args.batch,
         prompt_len=args.prompt_len, gen=args.gen, seed=args.seed,
-        sampling=args.continuous and (args.temperature > 0 or args.top_k > 1))
+        sampling=args.continuous and (args.temperature > 0 or args.top_k > 1),
+        kv_block_size=args.kv_block_size,
+        kv_pool_blocks=args.kv_pool_blocks)
     if args.continuous:
         return run_continuous(setup, args)
     return run_batch(setup, args)

@@ -325,6 +325,8 @@ def chunk_attend(
     cfg: AttnConfig,
     q_pos: jax.Array,  # (B, Lq) per-slot-per-token query positions
     window: int,
+    block_tables: jax.Array = None,  # (B, n_log) paged mode
+    block_size: int = 0,
 ):
     """Multi-query flash-decode over the seq-sharded ring cache — the
     chunked-prefill analogue of :func:`decode_attend`.  Each query token
@@ -333,16 +335,26 @@ def chunk_attend(
     with the same log-sum-exp psum.  Padded chunk tokens (beyond a slot's
     valid chunk length) compute garbage that the caller never reads —
     their KV is never written, so nothing they produce can reach a valid
-    token.  Returns (B, Lq, Hp, hd) f32 (padded heads zero)."""
+    token.  With ``block_tables`` the caches are the (R, S_row, ...) paged
+    pool and are first gathered into each slot's logical view (see
+    :func:`paged_gather_kv`) — the math below then runs unchanged, which
+    is what makes tokens independent of physical block placement.
+    Returns (B, Lq, Hp, hd) f32 (padded heads zero)."""
     b, lq, hp, hd = q_all.shape
-    s_loc = k_cache.shape[1]
     rank = lax.axis_index(MODEL_AXIS)
+    if block_tables is not None:
+        bl_loc = block_size // cfg.tp
+        k_cache = paged_gather_kv(k_cache, block_tables, bl_loc)
+        v_cache = paged_gather_kv(v_cache, block_tables, bl_loc)
+        s_glob = paged_s_glob(window, block_size, bl_loc)
+    else:
+        s_loc = k_cache.shape[1]
+        s_glob = rank * s_loc + jnp.arange(s_loc)
     qr, k_cache, v_cache = _kv_major_q(q_all, k_cache, v_cache, cfg)
 
     # slot validity per query token: slot s holds p_s = q - ((q - s) mod W)
-    s_glob = rank * s_loc + jnp.arange(s_loc)
     p_s = q_pos[..., None] - jnp.mod(q_pos[..., None] - s_glob, window)
-    valid = p_s >= 0  # (B, Lq, S_loc)
+    valid = (p_s >= 0) & slot_valid_mask(q_pos)[..., None]  # (B, Lq, S_loc)
 
     scale = 1.0 / math.sqrt(hd)
     s_ij = jnp.einsum("blkgd,bskd->blkgs", qr, k_cache.astype(qr.dtype),
@@ -376,6 +388,85 @@ def ring_slot(pos: jax.Array, window: int, s_loc: int):
     return slot - owner * s_loc, owner == rank
 
 
+def slot_valid_mask(pos: jax.Array) -> jax.Array:
+    """THE dead-lane test: ``pos >= 0``.
+
+    ``pos = -1`` is the sentinel for a lane that must be inert — retired,
+    never filled, or mid-chunked-prefill.  Every consumer of the sentinel
+    (the KV write mask in ``DecodeModel._write_token_kv``, the attend
+    validity in :func:`decode_attend` / :func:`chunk_attend`, and the
+    sampling clamp that keeps dead rows on the draw-free greedy path) goes
+    through this one helper so a new cache layout — e.g. the paged block
+    pool — cannot re-introduce a stale-lane write by re-deriving the test
+    locally and getting an edge wrong."""
+    return jnp.asarray(pos) >= 0
+
+
+# ---------------------------------------------------------------------------
+# Paged block-pool addressing (vLLM-style; see serve/kv_pool.py)
+# ---------------------------------------------------------------------------
+#
+# The pool cache keeps the ring tensors' exact shape — (R, S_row, n_kv, hd)
+# per layer per rank, S_row the per-rank row length — but reinterprets each
+# row as `S_row // block_loc` physical blocks of block_loc tokens
+# (block_loc = block_size // tp: every block is sequence-sharded across all
+# model ranks, so ANY table permutation stays rank-local).  A slot's logical
+# ring of `window` positions maps through its block table
+# bt[j] -> physical block id, with logical position p living at logical
+# block (p % window) // block_size, within-block offset p % block_size,
+# owner rank (offset // block_loc).
+#
+# Because attend first GATHERS the slot's blocks into logical order, the
+# attention math downstream is literally the ring math on the gathered view
+# — outputs are bit-identical for every physical placement of the table's
+# blocks by construction (a gather changes no values).
+
+
+def paged_gather_kv(cache: jax.Array, block_tables: jax.Array,
+                    block_loc: int) -> jax.Array:
+    """(R, S_row, n_kv, hd) pool -> (B, n_log * block_loc, n_kv, hd)
+    per-slot logical view through bt (B, n_log) physical block ids.
+    Unallocated table entries (< 0) clamp to block 0 — garbage the caller's
+    validity mask must exclude (it does: they can only cover positions
+    beyond the slot's write head)."""
+    r, s_row, nk, hd = cache.shape
+    bpr = s_row // block_loc
+    pool = cache.reshape(r * bpr, block_loc, nk, hd)
+    b, n_log = block_tables.shape
+    view = pool[jnp.clip(block_tables, 0, r * bpr - 1)]
+    return view.reshape(b, n_log * block_loc, nk, hd)
+
+
+def paged_s_glob(window: int, block_size: int, block_loc: int) -> jax.Array:
+    """Global ring offsets held by this rank's slice of the gathered
+    logical view (the paged analogue of ``rank * s_loc + arange(s_loc)``):
+    gathered index i sits in logical block i // block_loc at within-block
+    offset rank * block_loc + i % block_loc."""
+    rank = lax.axis_index(MODEL_AXIS)
+    i = jnp.arange((window // block_size) * block_loc)
+    return (i // block_loc) * block_size + rank * block_loc + i % block_loc
+
+
+def paged_slot(pos: jax.Array, window: int, block_size: int, block_loc: int,
+               block_tables: jax.Array):
+    """Paged write addressing: (pool row, per-rank row seq index, is_mine).
+
+    pos is (B,) or (B, Lq) global positions; block_tables (B, n_log).
+    is_mine is False for positions another rank's block slice holds —
+    combined with the caller's validity mask and a drop-mode scatter this
+    is the paged analogue of :func:`ring_slot`."""
+    rank = lax.axis_index(MODEL_AXIS)
+    lp = jnp.mod(pos, window)
+    j = lp // block_size
+    o = lp % block_size
+    flat_j = j.reshape(j.shape[0], -1)
+    phys = jnp.take_along_axis(block_tables, flat_j, axis=1).reshape(j.shape)
+    bpr = window // block_size  # pool rows are ring-length: blocks per row
+    row = phys // bpr
+    seq = (phys % bpr) * block_loc + o % block_loc
+    return row, seq, (o // block_loc) == rank
+
+
 def _kv_major_q(q_all: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                 cfg: AttnConfig):
     """Arrange the real query heads kv-major for the batched decode einsums.
@@ -405,6 +496,8 @@ def decode_attend(
     cfg: AttnConfig,
     pos: jax.Array,
     window: int,
+    block_tables: jax.Array = None,  # (B, n_log) paged mode
+    block_size: int = 0,
 ):
     """Flash-decode over the seq-sharded ring cache WITHOUT materializing a
     GQA-expanded KV copy: real query heads are reshaped kv-major (see
@@ -416,19 +509,29 @@ def decode_attend(
 
     ``pos`` may be a scalar (one shared position) or a (B,) vector of
     per-slot positions (continuous batching) — slot validity is computed
-    per batch element either way."""
+    per batch element either way.  With ``block_tables`` the caches are
+    the (R, S_row, ...) paged pool: each slot's blocks are gathered into
+    logical ring order first (:func:`paged_gather_kv`), so the math below
+    — and therefore every output bit — is independent of the physical
+    placement, sharing, or fragmentation of the table's blocks."""
     b, hp, hd = q_all.shape
-    s_loc = k_cache.shape[1]
     rank = lax.axis_index(MODEL_AXIS)
+    if block_tables is not None:
+        bl_loc = block_size // cfg.tp
+        k_cache = paged_gather_kv(k_cache, block_tables, bl_loc)
+        v_cache = paged_gather_kv(v_cache, block_tables, bl_loc)
+        s_glob = paged_s_glob(window, block_size, bl_loc)
+    else:
+        s_loc = k_cache.shape[1]
+        s_glob = rank * s_loc + jnp.arange(s_loc)
     qr, k_cache, v_cache = _kv_major_q(q_all, k_cache, v_cache, cfg)
 
     # slot validity: slot s (global) holds position p_s = pos - ((pos-s) mod W)
     pos = jnp.asarray(pos)
     if pos.ndim == 0:
         pos = jnp.broadcast_to(pos, (b,))
-    s_glob = rank * s_loc + jnp.arange(s_loc)
     p_s = pos[:, None] - jnp.mod(pos[:, None] - s_glob[None, :], window)
-    valid = p_s >= 0  # (B, S_loc)
+    valid = (p_s >= 0) & slot_valid_mask(pos)[:, None]  # (B, S_loc)
 
     scale = 1.0 / math.sqrt(hd)
     s_ij = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache.astype(qr.dtype),

@@ -78,9 +78,42 @@ class DecodeSpec:
     # with temp <= 0 or top_k == 1 still take the greedy path bit-exactly,
     # so a sampling engine at temp 0 matches a greedy engine token-for-token.
     sampling: bool = False
+    # Paged KV block pool (serve/kv_pool.py).  kv_block_size > 0 switches
+    # the attention cache from one private ring per slot to a shared pool
+    # of fixed-size blocks addressed through per-slot block tables:
+    # decode_fn / prefill_chunk_fn take a trailing `block_tables` (B, n_log)
+    # int32 argument, and the cache kv leaves become (L, R, cache_len, ...)
+    # with R pool rows instead of B lanes.  Requires cache_len %
+    # kv_block_size == 0, kv_block_size % tp == 0, batch_sharded=False
+    # (blocks may be shared across lanes, so the pool is batch-replicated),
+    # and a CHUNKED_PREFILL_ARCHS architecture.
+    kv_block_size: int = 0
+    # Total physical blocks (0 = batch_global * cache_len // kv_block_size,
+    # i.e. the same device bytes as the rings it replaces).  Rounded up to
+    # whole pool rows of cache_len // kv_block_size blocks each.
+    kv_pool_blocks: int = 0
 
     def batch_pspec(self, ms) -> tuple:
         return (ms.fsdp_axes,) if self.batch_sharded else (None,)
+
+    @property
+    def paged(self) -> bool:
+        return self.kv_block_size > 0
+
+    @property
+    def blocks_per_slot(self) -> int:
+        """Logical blocks per slot ring (== physical blocks per pool row)."""
+        return self.cache_len // self.kv_block_size
+
+    def pool_rows(self) -> int:
+        if not self.paged:
+            return self.batch_global
+        want = self.kv_pool_blocks or self.batch_global * self.blocks_per_slot
+        return -(-want // self.blocks_per_slot)
+
+    def pool_blocks(self) -> int:
+        """Physical blocks actually materialized (whole rows)."""
+        return self.pool_rows() * self.blocks_per_slot
 
 
 def make_decode_spec(model: Model, shape, rowquant_mlp: bool = False) -> DecodeSpec:
@@ -115,6 +148,25 @@ class DecodeModel:
         if cfg.has_attention:
             assert spec.cache_len == 0 or spec.cache_len % self.tp == 0, (
                 spec.cache_len, self.tp)
+        if spec.paged:
+            if cfg.arch_type not in CHUNKED_PREFILL_ARCHS:
+                raise ValueError(
+                    f"paged KV (kv_block_size={spec.kv_block_size}) supports "
+                    f"{CHUNKED_PREFILL_ARCHS}, not {cfg.arch_type!r}")
+            if spec.batch_sharded:
+                raise ValueError(
+                    "paged KV requires batch_sharded=False: block tables may "
+                    "point any lane at any pool row, so the pool is "
+                    "batch-replicated over the data axis")
+            if spec.kv_block_size % self.tp:
+                raise ValueError(
+                    f"kv_block_size ({spec.kv_block_size}) must be a "
+                    f"multiple of the model-axis size ({self.tp}) — every "
+                    "block is sequence-sharded across all ranks")
+            if spec.cache_len % spec.kv_block_size:
+                raise ValueError(
+                    f"cache_len ({spec.cache_len}) must be a multiple of "
+                    f"kv_block_size ({spec.kv_block_size})")
         self.s_loc = spec.cache_len // self.tp if spec.cache_len else 0
         self.b_loc = (
             spec.batch_global // ms.fsdp_size if spec.batch_sharded else spec.batch_global
@@ -134,11 +186,14 @@ class DecodeModel:
         specs: Cache = {}
 
         def kv(prefix, layers, s):
-            shp = (layers, B, s, m.acfg.n_kv, cfg.head_dim)
+            # paged: rows are pool storage, not lanes — never batch-sharded
+            rows = sp.pool_rows() if sp.paged else B
+            rax = None if sp.paged else bax
+            shp = (layers, rows, s, m.acfg.n_kv, cfg.head_dim)
             structs[prefix + "k"] = jax.ShapeDtypeStruct(shp, jnp.bfloat16)
             structs[prefix + "v"] = jax.ShapeDtypeStruct(shp, jnp.bfloat16)
-            specs[prefix + "k"] = P(None, bax, "model", None, None)
-            specs[prefix + "v"] = P(None, bax, "model", None, None)
+            specs[prefix + "k"] = P(None, rax, "model", None, None)
+            specs[prefix + "v"] = P(None, rax, "model", None, None)
 
         if cfg.arch_type in ("dense", "vlm", "moe"):
             kv("", cfg.n_layers, sp.cache_len)
@@ -176,7 +231,10 @@ class DecodeModel:
         out = {}
         for k, st in structs.items():
             shp = list(st.shape)
-            shp[1] = self.b_loc
+            # paged kv rows are pool storage (already final in the struct);
+            # every other cache leaf's dim 1 is the (possibly sharded) batch
+            if not (self.spec.paged and k not in ("conv", "ssm")):
+                shp[1] = self.b_loc
             if k in ("conv",):
                 shp[3] //= self.tp
             elif k in ("ssm",):
@@ -192,7 +250,9 @@ class DecodeModel:
 
     def decode_fn(self, params: Params, cache: Cache, tokens: jax.Array,
                   pos: jax.Array, key: jax.Array,
-                  sample: Optional[dict] = None) -> tuple[jax.Array, Cache]:
+                  sample: Optional[dict] = None,
+                  block_tables: Optional[jax.Array] = None
+                  ) -> tuple[jax.Array, Cache]:
         """tokens (B_loc,) int32 current input; pos () or (B_loc,) int32 its
         position — a vector gives every batch slot its own sequence position
         (continuous batching).  pos[b] < 0 marks a DEAD lane: its KV write
@@ -210,6 +270,8 @@ class DecodeModel:
         pos = jnp.asarray(pos, jnp.int32)
         if pos.ndim == 0:
             pos = jnp.broadcast_to(pos, tokens.shape)
+        if self.spec.paged and block_tables is None:
+            raise ValueError("paged DecodeSpec: decode_fn needs block_tables")
         emb = m.engine.gather("embed", params["embed"], key)
         x = L.embed_vocab_parallel(tokens[:, None], emb)[:, 0]  # (B, d)
 
@@ -217,10 +279,10 @@ class DecodeModel:
 
         if cfg.arch_type in ("dense", "vlm"):
             x, cache = self._decode_attn_stack(params, "layers", x, cache, pos, cos, sin, key,
-                                               mlp="dense")
+                                               mlp="dense", block_tables=block_tables)
         elif cfg.arch_type == "moe":
             x, cache = self._decode_attn_stack(params, "layers", x, cache, pos, cos, sin, key,
-                                               mlp="moe")
+                                               mlp="moe", block_tables=block_tables)
         elif cfg.arch_type == "ssm":
             x, cache = self._decode_mamba_stack(params, x, cache, key)
         elif cfg.arch_type == "hybrid":
@@ -234,21 +296,32 @@ class DecodeModel:
         x = L.rms_norm(x, fn, cfg.norm_eps)
         head = emb if cfg.tie_embeddings else m.engine.gather("lm_head", params["lm_head"], key)
         logits = L.vocab_parallel_logits(x, head)
-        nxt = self._sample(logits, head.shape[0], sample, pos + 1)
+        nxt = self._sample(logits, head.shape[0], sample, pos + 1,
+                           valid=attn_mod.slot_valid_mask(pos))
         return nxt.astype(jnp.int32), cache
 
-    def _sample(self, logits, v_local, sample, n_consumed):
+    def _sample(self, logits, v_local, sample, n_consumed, valid=None):
         """Next-token selection: greedy argmax, or per-slot sampling keyed by
         fold_in(request key, tokens consumed so far) when `sample` is given.
         n_consumed (B,) is the model-visible prefix length, i.e. the global
         position of the token being produced — identical for a request
         whether it runs solo or interleaved, which is what pins sampled
-        streams across batch compositions."""
+        streams across batch compositions.
+
+        `valid` (B,) bool — dead lanes (attention.slot_valid_mask: the ONE
+        sentinel test) are clamped to temp 0 / top-k 1 in the DEVICE step
+        itself, so they take the draw-free greedy reduction no matter what
+        the host mirrors hold (schedulers also clear them host-side; this
+        makes the Gumbel skip a property of the sentinel, not of scheduler
+        discipline)."""
         if sample is None:
             return L.greedy_sample_vocab_parallel(logits, v_local)
+        temp, top_k = sample["temp"], sample["top_k"]
+        if valid is not None:
+            temp = jnp.where(valid, temp, 0.0)
+            top_k = jnp.where(valid, jnp.asarray(top_k), 1)
         skeys = jax.vmap(jax.random.fold_in)(sample["key"], n_consumed)
-        return L.sample_vocab_parallel(logits, v_local, sample["temp"],
-                                       sample["top_k"], skeys)
+        return L.sample_vocab_parallel(logits, v_local, temp, top_k, skeys)
 
     def _decode_rope(self, pos):
         """pos () or (B,) -> cos/sin broadcastable for decode_new_kv
@@ -261,7 +334,8 @@ class DecodeModel:
             return L.mrope_cos_sin(pos3, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections)
         return L.rope_cos_sin(pos, cfg.head_dim, cfg.rope_theta)
 
-    def _write_token_kv(self, kc_all, vc_all, layer, k1, v1, pos):
+    def _write_token_kv(self, kc_all, vc_all, layer, k1, v1, pos,
+                        block_tables=None):
         """Write this token's KV into the scan-carried stacked cache
         (L, B, S_loc, n_kv, hd) at (layer, b, ring slot of pos[b]) — a
         token-sized gather + scatter per layer (~KB) instead of re-emitting
@@ -270,29 +344,52 @@ class DecodeModel:
         positions never touch each other's cache lines.
 
         pos[b] < 0 is the DEAD-LANE sentinel (retired / never-filled /
-        mid-chunked-prefill slots): the lane's write is masked out entirely,
+        mid-chunked-prefill slots; ``attention.slot_valid_mask`` is the one
+        place that owns the test): the lane's write is masked out entirely,
         so a dead lane's ring bytes are frozen — required by the chunked
         prefill path, which fills a lane's ring incrementally and cannot
-        rely on a full-ring splice to wipe garbage writes."""
+        rely on a full-ring splice to wipe garbage writes.
+
+        With ``block_tables`` the cache is the (L, R, S_row, ...) paged
+        pool: the ring offset maps through the lane's table to a (pool row,
+        row seq index) target instead (``attention.paged_slot``), and
+        masked-out lanes redirect to the out-of-range row R and are DROPPED
+        — same determinism argument as the chunk path below."""
         b = k1.shape[0]
+        if block_tables is not None:
+            bl_loc = self.spec.kv_block_size // self.tp
+            row, seq, is_mine = attn_mod.paged_slot(
+                pos, self.spec.cache_len, self.spec.kv_block_size, bl_loc,
+                block_tables)
+            mask = is_mine & attn_mod.slot_valid_mask(pos)
+            row = jnp.where(mask, row, kc_all.shape[1])  # OOB row => dropped
+            kc_all = kc_all.at[layer, row, seq].set(
+                k1.astype(kc_all.dtype), mode="drop")
+            vc_all = vc_all.at[layer, row, seq].set(
+                v1.astype(vc_all.dtype), mode="drop")
+            return kc_all, vc_all
         s_loc = kc_all.shape[2]
         idx, is_mine = attn_mod.ring_slot(pos, self.spec.cache_len, s_loc)
         bi = jnp.arange(b)
-        mine = (is_mine & (pos >= 0))[:, None, None]
+        mine = (is_mine & attn_mod.slot_valid_mask(pos))[:, None, None]
         new_k = jnp.where(mine, k1.astype(kc_all.dtype), kc_all[layer, bi, idx])
         new_v = jnp.where(mine, v1.astype(vc_all.dtype), vc_all[layer, bi, idx])
         kc_all = kc_all.at[layer, bi, idx].set(new_k)
         vc_all = vc_all.at[layer, bi, idx].set(new_v)
         return kc_all, vc_all
 
-    def _decode_attn_layer(self, x, w, kc_all, vc_all, layer, pos, cos, sin, mlp):
+    def _decode_attn_layer(self, x, w, kc_all, vc_all, layer, pos, cos, sin, mlp,
+                           block_tables=None):
         m, cfg = self.m, self.m.cfg
         h = L.rms_norm(x, w["attn_norm"], cfg.norm_eps)
         q_all, k1, v1 = attn_mod.decode_new_kv(h, w, m.acfg, cos, sin)
-        kc_all, vc_all = self._write_token_kv(kc_all, vc_all, layer, k1, v1, pos)
+        kc_all, vc_all = self._write_token_kv(kc_all, vc_all, layer, k1, v1, pos,
+                                              block_tables=block_tables)
         kc = lax.dynamic_index_in_dim(kc_all, layer, 0, keepdims=False)
         vc = lax.dynamic_index_in_dim(vc_all, layer, 0, keepdims=False)
-        o = attn_mod.decode_attend(q_all, kc, vc, m.acfg, pos, self.spec.cache_len)
+        o = attn_mod.decode_attend(q_all, kc, vc, m.acfg, pos, self.spec.cache_len,
+                                   block_tables=block_tables,
+                                   block_size=self.spec.kv_block_size)
         a = attn_mod.decode_out_proj(o, w, m.acfg, x.dtype)
         x = x + a
         h = L.rms_norm(x, w["mlp_norm"], cfg.norm_eps)
@@ -333,7 +430,8 @@ class DecodeModel:
             out[n] = m.engine.gather_rowquant(f"{prefix}/{n}", lw[n], lkey)
         return out
 
-    def _decode_attn_stack(self, params, prefix, x, cache, pos, cos, sin, key, mlp):
+    def _decode_attn_stack(self, params, prefix, x, cache, pos, cos, sin, key, mlp,
+                           block_tables=None):
         m = self.m
         grp = m._group(params, prefix)
         names = list(grp.keys())
@@ -344,7 +442,8 @@ class DecodeModel:
             lkey = jax.random.fold_in(key, idx)
             w = self._gather_layer_w(prefix, names, lw, lkey, mlp=mlp)
             x, kc_all, vc_all = self._decode_attn_layer(
-                x, w, kc_all, vc_all, idx, pos, cos, sin, mlp)
+                x, w, kc_all, vc_all, idx, pos, cos, sin, mlp,
+                block_tables=block_tables)
             return (x, kc_all, vc_all), None
 
         nl = jax.tree.leaves(grp)[0].shape[0]
@@ -357,7 +456,8 @@ class DecodeModel:
     # Chunked prefill (one prompt chunk per slot, fused into the pool)
     # ------------------------------------------------------------------
 
-    def _write_chunk_kv(self, kc_all, vc_all, layer, k1, v1, pos, n_valid):
+    def _write_chunk_kv(self, kc_all, vc_all, layer, k1, v1, pos, n_valid,
+                        block_tables=None):
         """Write one chunk's KV into the stacked pool cache at each slot's
         own ring offsets.  k1/v1 (B, Lq, n_kv, hd); pos (B, Lq) global
         positions; n_valid (B,) valid tokens per slot (0 = lane not
@@ -373,10 +473,26 @@ class DecodeModel:
         padded tokens or non-prefilling lanes, so live decode slots' (and
         dead lanes') ring bytes are untouched."""
         b, lq = pos.shape
+        tok_valid = jnp.arange(lq)[None, :] < n_valid[:, None]
+        if block_tables is not None:
+            # paged: targets map through the lane's table to (pool row, row
+            # seq index); the drop redirect goes to the out-of-range row R.
+            # Same single-writer argument: a chunk's positions are distinct
+            # mod the window, and the scheduler never hands two lanes the
+            # same writable physical block.
+            bl_loc = self.spec.kv_block_size // self.tp
+            row, seq, is_mine = attn_mod.paged_slot(
+                pos, self.spec.cache_len, self.spec.kv_block_size, bl_loc,
+                block_tables)
+            row = jnp.where(is_mine & tok_valid, row, kc_all.shape[1])
+            kc_all = kc_all.at[layer, row, seq].set(k1.astype(kc_all.dtype),
+                                                    mode="drop")
+            vc_all = vc_all.at[layer, row, seq].set(v1.astype(vc_all.dtype),
+                                                    mode="drop")
+            return kc_all, vc_all
         s_loc = kc_all.shape[2]
         idx, is_mine = attn_mod.ring_slot(pos, self.spec.cache_len, s_loc)
         bi = jnp.broadcast_to(jnp.arange(b)[:, None], (b, lq))
-        tok_valid = jnp.arange(lq)[None, :] < n_valid[:, None]
         idx = jnp.where(is_mine & tok_valid, idx, s_loc)  # s_loc => dropped
         kc_all = kc_all.at[layer, bi, idx].set(k1.astype(kc_all.dtype),
                                                mode="drop")
@@ -385,7 +501,7 @@ class DecodeModel:
         return kc_all, vc_all
 
     def _chunk_attn_layer(self, x, w, kc_all, vc_all, layer, pos, n_valid,
-                          cos, sin, mlp):
+                          cos, sin, mlp, block_tables=None):
         """One attention layer over a (B, Lq, d) chunk: write the chunk's KV
         into the ring first, then attend the full ring (the chunk sees its
         own earlier tokens AND every previously-prefilled chunk through the
@@ -395,10 +511,13 @@ class DecodeModel:
         h = L.rms_norm(x, w["attn_norm"], cfg.norm_eps)
         q_all, k1, v1 = attn_mod.chunk_new_kv(h, w, m.acfg, cos, sin)
         kc_all, vc_all = self._write_chunk_kv(kc_all, vc_all, layer, k1, v1,
-                                              pos, n_valid)
+                                              pos, n_valid,
+                                              block_tables=block_tables)
         kc = lax.dynamic_index_in_dim(kc_all, layer, 0, keepdims=False)
         vc = lax.dynamic_index_in_dim(vc_all, layer, 0, keepdims=False)
-        o = attn_mod.chunk_attend(q_all, kc, vc, m.acfg, pos, self.spec.cache_len)
+        o = attn_mod.chunk_attend(q_all, kc, vc, m.acfg, pos, self.spec.cache_len,
+                                  block_tables=block_tables,
+                                  block_size=self.spec.kv_block_size)
         hp = o.shape[2]
         a = attn_mod.decode_out_proj(o.reshape(b * lq, hp, cfg.head_dim), w,
                                      m.acfg, x.dtype)
@@ -417,7 +536,7 @@ class DecodeModel:
         return x, kc_all, vc_all
 
     def _chunk_attn_stack(self, params, prefix, x, cache, pos, n_valid, cos,
-                          sin, key, mlp):
+                          sin, key, mlp, block_tables=None):
         m = self.m
         grp = m._group(params, prefix)
         names = list(grp.keys())
@@ -430,7 +549,8 @@ class DecodeModel:
             # dequantized weights are bit-identical between the two paths.
             w = self._gather_layer_w(prefix, names, lw, lkey, mlp=None)
             x, kc_all, vc_all = self._chunk_attn_layer(
-                x, w, kc_all, vc_all, idx, pos, n_valid, cos, sin, mlp)
+                x, w, kc_all, vc_all, idx, pos, n_valid, cos, sin, mlp,
+                block_tables=block_tables)
             return (x, kc_all, vc_all), None
 
         nl = jax.tree.leaves(grp)[0].shape[0]
@@ -441,7 +561,8 @@ class DecodeModel:
     def prefill_chunk_fn(self, params: Params, cache: Cache,
                          tokens: jax.Array, offset: jax.Array,
                          n_valid: jax.Array, key: jax.Array,
-                         sample: Optional[dict] = None
+                         sample: Optional[dict] = None,
+                         block_tables: Optional[jax.Array] = None
                          ) -> tuple[jax.Array, Cache]:
         """Offset-aware chunked prefill fused over the WHOLE slot pool.
 
@@ -465,6 +586,8 @@ class DecodeModel:
             raise NotImplementedError(
                 f"chunked prefill supports {CHUNKED_PREFILL_ARCHS}, "
                 f"not {cfg.arch_type!r}")
+        if self.spec.paged and block_tables is None:
+            raise ValueError("paged DecodeSpec requires block_tables")
         b, lq = tokens.shape
         offset = jnp.asarray(offset, jnp.int32)
         n_valid = jnp.asarray(n_valid, jnp.int32)
@@ -474,14 +597,15 @@ class DecodeModel:
         cos, sin = L.rope_cos_sin(pos, cfg.head_dim, cfg.rope_theta)
         x, cache = self._chunk_attn_stack(
             params, "layers", x, cache, pos, n_valid, cos, sin, key,
-            mlp="moe" if cfg.is_moe else "dense")
+            mlp="moe" if cfg.is_moe else "dense", block_tables=block_tables)
         fn = m.engine.gather("final_norm", params["final_norm"], key)
         last = jnp.clip(n_valid - 1, 0, lq - 1)
         h = L.rms_norm(x[jnp.arange(b), last], fn, cfg.norm_eps)
         head = emb if cfg.tie_embeddings else m.engine.gather(
             "lm_head", params["lm_head"], key)
         logits = L.vocab_parallel_logits(h, head)
-        nxt = self._sample(logits, head.shape[0], sample, offset + n_valid)
+        nxt = self._sample(logits, head.shape[0], sample, offset + n_valid,
+                           valid=n_valid > 0)
         return nxt.astype(jnp.int32), cache
 
     def _decode_mamba_layer(self, x, w, conv, ssm):
@@ -627,6 +751,10 @@ class DecodeModel:
         sample: optional per-slot sampling state (see decode_fn); the first
         generated token is keyed by fold_in(slot key, prompt length)."""
         m, cfg = self.m, self.m.cfg
+        if self.spec.paged:
+            raise NotImplementedError(
+                "whole-prompt prefill is ring-only; paged specs must use "
+                "chunked prefill (prefill_chunk_fn)")
         tokens = batch["tokens"]
         b, s = tokens.shape
         if self.m.cfg.has_attention:

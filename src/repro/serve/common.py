@@ -39,18 +39,33 @@ def decode_cache_len(cfg: ModelConfig, prompt_len: int, gen: int, tp: int) -> in
 def make_serve_spec(cfg: ModelConfig, ms: MeshSpec, batch: int,
                     prompt_len: int, gen: int, *, sampling: bool = False,
                     rowquant_mlp: bool = False,
-                    batch_sharded: Optional[bool] = None) -> DecodeSpec:
-    """The DecodeSpec every serve entry point derives from (arch, shape)."""
+                    batch_sharded: Optional[bool] = None,
+                    kv_block_size: int = 0,
+                    kv_pool_blocks: int = 0) -> DecodeSpec:
+    """The DecodeSpec every serve entry point derives from (arch, shape).
+
+    kv_block_size > 0 turns on the paged KV pool (block-table addressed;
+    requires chunked prefill and an unsharded batch axis — block tables can
+    point any lane at any pool row); kv_pool_blocks sizes the pool
+    (0 = one full logical window per slot)."""
     if batch_sharded is None:
-        batch_sharded = batch % ms.fsdp_size == 0
+        batch_sharded = batch % ms.fsdp_size == 0 and not kv_block_size
+    cache_len = decode_cache_len(cfg, prompt_len, gen, ms.model_size)
+    if kv_block_size and cache_len:
+        # the logical window must tile into whole blocks, and each block
+        # must split evenly across the seq-sharded model axis
+        kv_block_size += (-kv_block_size) % ms.model_size
+        cache_len += (-cache_len) % kv_block_size
     return DecodeSpec(
-        cache_len=decode_cache_len(cfg, prompt_len, gen, ms.model_size),
+        cache_len=cache_len,
         batch_global=batch,
         batch_sharded=batch_sharded,
         enc_len=max(prompt_len // cfg.enc_frames_ratio, ms.model_size)
         if cfg.arch_type == "audio" else 0,
         sampling=sampling,
         rowquant_mlp=rowquant_mlp,
+        kv_block_size=kv_block_size if cache_len else 0,
+        kv_pool_blocks=kv_pool_blocks,
     )
 
 
@@ -77,7 +92,9 @@ def build_serve_setup(arch, *, data_par: int = 1, model_par: int = 1,
                       batch: int = 8, prompt_len: int = 32, gen: int = 16,
                       seed: int = 0, sampling: bool = False,
                       rowquant_mlp: bool = False,
-                      batch_sharded: Optional[bool] = None) -> ServeSetup:
+                      batch_sharded: Optional[bool] = None,
+                      kv_block_size: int = 0,
+                      kv_pool_blocks: int = 0) -> ServeSetup:
     """Build (mesh, model, params, DecodeSpec, ServeEngine) for serving.
     `arch` is a registry name (resolved smoke/full) or a ModelConfig."""
     mesh = jax.make_mesh((data_par, model_par), ("data", "model"))
@@ -91,7 +108,9 @@ def build_serve_setup(arch, *, data_par: int = 1, model_par: int = 1,
     params = model.init_params(jax.random.PRNGKey(seed))
     spec = make_serve_spec(cfg, ms, batch, prompt_len, gen, sampling=sampling,
                            rowquant_mlp=rowquant_mlp,
-                           batch_sharded=batch_sharded)
+                           batch_sharded=batch_sharded,
+                           kv_block_size=kv_block_size,
+                           kv_pool_blocks=kv_pool_blocks)
     engine = ServeEngine(model, mesh, spec)
     return ServeSetup(cfg=cfg, model=model, params=params, mesh=mesh, ms=ms,
                       spec=spec, engine=engine)
@@ -132,14 +151,20 @@ def scheduler_batch_builder(cfg: ModelConfig, spec: DecodeSpec, ms: MeshSpec):
 
 def make_scheduler(setup: ServeSetup, *, gather_key=None,
                    prefill_chunk: int = 0, prefill_buckets: int = 4,
-                   prefill_interleave: int = 1):
+                   prefill_interleave: int = 1,
+                   kv_quant_bits: int = 0, kv_quant_horizon: int = 0,
+                   kv_prefix_share: bool = True):
     """The ContinuousScheduler every serve entry point builds from a
     ServeSetup: launcher, bench, and examples get the same batch_builder
-    (modality stubs included) and the same chunked-admission knobs."""
+    (modality stubs included) and the same chunked-admission knobs.  The
+    kv_quant_* knobs configure the paged pool's quantized cold tier (paged
+    setups only)."""
     from .scheduler import ContinuousScheduler
     return ContinuousScheduler(
         setup.model, setup.mesh, setup.spec, setup.params,
         gather_key=gather_key,
         batch_builder=scheduler_batch_builder(setup.cfg, setup.spec, setup.ms),
         prefill_chunk=prefill_chunk, prefill_buckets=prefill_buckets,
-        prefill_interleave=prefill_interleave)
+        prefill_interleave=prefill_interleave,
+        kv_quant_bits=kv_quant_bits, kv_quant_horizon=kv_quant_horizon,
+        kv_prefix_share=kv_prefix_share)

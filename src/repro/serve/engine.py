@@ -32,6 +32,7 @@ from ..compat import shard_map
 from ..core.quant import QuantizedParam, qparam_decode, qparam_split_stack
 from ..models.decode import ROWQUANT_MLP, DecodeModel, DecodeSpec, make_decode_spec
 from ..models.transformer import Model
+from .kv_pool import PoolExhausted, decode_block, encode_block
 
 
 def prepare_wire_params(model: Model, params: dict) -> dict:
@@ -141,6 +142,7 @@ class ServeEngine:
         # continuous scheduler right-pads prompt chunks into a bounded
         # bucket set, so this cache holds at most n_buckets entries.
         self._chunk_steps: dict[int, object] = {}
+        self._block_ops = None
 
     # -- jitted steps ---------------------------------------------------------
 
@@ -153,14 +155,27 @@ class ServeEngine:
         [, sample]) -> (next_tokens, cache).  pos is PER-SLOT — every batch
         slot advances at its own sequence position, which is what lets the
         continuous-batching scheduler interleave requests mid-decode.  The
-        trailing `sample` arg exists iff ``spec.sampling``."""
+        trailing `sample` arg exists iff ``spec.sampling``.
+
+        Paged specs take a block-table arg after pos: (params, cache,
+        tokens, pos, block_tables (B, blocks_per_slot) i32, key
+        [, sample]) — the table is replicated (every rank resolves the
+        same logical->physical block mapping; blocks are seq-sharded, so
+        each rank's gather stays rank-local)."""
         if self._decode is None:
             in_specs = [self._pspecs, self.cache_pspecs, P(self.bax),
                         P(self.bax), P()]
+            raw = self.dm.decode_fn
+            if self.spec.paged:
+                in_specs.insert(4, P(None, None))
+
+                def raw(params, cache, tokens, pos, bt, key, *extra):
+                    return self.dm.decode_fn(params, cache, tokens, pos,
+                                             key, *extra, block_tables=bt)
             if self.spec.sampling:
                 in_specs.append(self.sample_pspecs())
             fn = shard_map(
-                self.dm.decode_fn, mesh=self.mesh,
+                raw, mesh=self.mesh,
                 in_specs=tuple(in_specs),
                 out_specs=(P(self.bax), self.cache_pspecs),
                 check_vma=False,
@@ -169,6 +184,10 @@ class ServeEngine:
         return self._decode
 
     def prefill_step(self, batch_pspecs: dict):
+        if self.spec.paged:
+            raise NotImplementedError(
+                "whole-prompt prefill is ring-only; paged engines must use "
+                "chunked prefill (prefill_chunk_step / generate(prefill_chunk=...))")
         if self._prefill is None:
             in_specs = [self._pspecs, batch_pspecs, P()]
             if self.spec.sampling:
@@ -192,10 +211,21 @@ class ServeEngine:
         if bucket_len not in self._chunk_steps:
             in_specs = [self._pspecs, self.cache_pspecs, P(self.bax),
                         P(self.bax), P(self.bax), P()]
+            raw = self.dm.prefill_chunk_fn
+            if self.spec.paged:
+                # paged call shape: (params, cache, tokens, offset, n_valid,
+                # block_tables, key [, sample])
+                in_specs.insert(5, P(None, None))
+
+                def raw(params, cache, tokens, offset, n_valid, bt, key,
+                        *extra):
+                    return self.dm.prefill_chunk_fn(
+                        params, cache, tokens, offset, n_valid, key, *extra,
+                        block_tables=bt)
             if self.spec.sampling:
                 in_specs.append(self.sample_pspecs())
             fn = shard_map(
-                self.dm.prefill_chunk_fn, mesh=self.mesh,
+                raw, mesh=self.mesh,
                 in_specs=tuple(in_specs),
                 out_specs=(P(self.bax), self.cache_pspecs),
                 check_vma=False,
@@ -211,6 +241,80 @@ class ServeEngine:
             k: jax.device_put(jnp.zeros(s.shape, s.dtype), NamedSharding(self.mesh, specs[k]))
             for k, s in structs.items()
         }
+
+    # -- paged block ops (cold tier + copy-on-write) -----------------------------
+
+    def kv_block_ops(self):
+        """jit'd (extract, load, copy) over a paged cache's global k/v
+        arrays, addressing ONE physical block by id.
+
+        A block's bytes live strided across the model axis (each rank holds
+        its block_loc-token slice of every block), so in the global arrays
+        block `bid` = row ``bid // bpr``, seq positions
+        ``rank * s_loc + (bid % bpr) * block_loc + [0, block_loc)`` per
+        rank — token order inside the (L, block_size, n_kv, hd) view is the
+        natural position order.  These run OUTSIDE shard_map between steps
+        (cold-tier demote/rehydrate, COW forks); they are off the decode
+        hot path."""
+        if self._block_ops is None:
+            sp, tp = self.spec, self.dm.tp
+            bs = sp.kv_block_size
+            bpr = sp.cache_len // bs
+            bl = bs // tp
+            s_loc = sp.cache_len // tp
+            i = jnp.arange(bs)
+
+            def seq_of(idx):
+                return (i // bl) * s_loc + idx * bl + i % bl
+
+            def extract(cache, bid):
+                row, seq = bid // bpr, seq_of(bid % bpr)
+                return cache["k"][:, row, seq], cache["v"][:, row, seq]
+
+            def load(cache, bid, kblk, vblk):
+                row, seq = bid // bpr, seq_of(bid % bpr)
+                return dict(
+                    cache,
+                    k=cache["k"].at[:, row, seq].set(
+                        kblk.astype(cache["k"].dtype)),
+                    v=cache["v"].at[:, row, seq].set(
+                        vblk.astype(cache["v"].dtype)))
+
+            def copy(cache, src, dst):
+                kb, vb = extract(cache, src)
+                return load(cache, dst, kb, vb)
+
+            self._block_ops = (jax.jit(extract),
+                               jax.jit(load, donate_argnums=(0,)),
+                               jax.jit(copy, donate_argnums=(0,)))
+        return self._block_ops
+
+    def demote_cold_blocks(self, cache, pool, now: int) -> int:
+        """Quantized cold tier: re-encode cached (refcount-0 prefix) blocks
+        idle past the pool's quant horizon into the `core.quant` wire format
+        (host-resident packed codes + per-bucket meta) and free their hot
+        blocks.  Returns the number of blocks demoted.  Values seen by
+        attention are unchanged until a block is rehydrated — and demotion
+        only ever touches blocks no live request references."""
+        ids = pool.demotable(now)
+        if not ids:
+            return 0
+        extract, _, _ = self.kv_block_ops()
+        for bid in ids:
+            kb, vb = extract(cache, jnp.int32(bid))
+            cold = encode_block(jax.device_get(kb), jax.device_get(vb),
+                                pool.quant_cfg)
+            pool.demote(bid, cold, now)
+        return len(ids)
+
+    def rehydrate_block(self, cache, pool, key, now: int):
+        """Bring a cold prefix block back hot: alloc a block, decode the
+        wire codes (bit-exact `core.quant` QDQ values), scatter them in.
+        Returns (bid, cache)."""
+        bid, cold = pool.rehydrate(key, now)
+        _, load, _ = self.kv_block_ops()
+        kb, vb = decode_block(cold)
+        return bid, load(cache, jnp.int32(bid), kb, vb)
 
     def generate(self, params, prompt_batch: dict, batch_pspecs: dict,
                  n_tokens: int, key: Optional[jax.Array] = None,
@@ -244,6 +348,22 @@ class ServeEngine:
         if self.spec.sampling and sample is None:
             sample = greedy_sample_params(b)
         extra = (sample,) if self.spec.sampling else ()
+        bt = ()
+        if self.spec.paged:
+            if not prefill_chunk:
+                raise ValueError(
+                    "paged DecodeSpec serves through chunked prefill only; "
+                    "pass prefill_chunk=...")
+            # solo path: each lane owns its full logical window, laid out as
+            # the identity block table — the pool must hold b * bps blocks.
+            bps = self.spec.blocks_per_slot
+            need, have = b * bps, self.spec.pool_blocks()
+            if need > have:
+                raise PoolExhausted(
+                    f"KV pool exhausted: {b} lanes need {need} blocks but "
+                    f"the pool holds {have}; raise --kv-pool-blocks (or "
+                    "lower the batch)")
+            bt = (jnp.arange(b * bps, dtype=jnp.int32).reshape(b, bps),)
         if prefill_chunk:
             if fold_step_keys:
                 raise ValueError(
@@ -269,7 +389,7 @@ class ServeEngine:
                 chunk = chunk.at[:, :clen].set(tokens[:, o:o + clen])
                 nxt, cache = self.prefill_chunk_step(bucket)(
                     params, cache, chunk, jnp.full((b,), o, jnp.int32),
-                    jnp.full((b,), clen, jnp.int32), key, *extra)
+                    jnp.full((b,), clen, jnp.int32), *bt, key, *extra)
         else:
             nxt, cache = self.prefill_step(batch_pspecs)(
                 params, prompt_batch, key, *extra)
@@ -278,6 +398,6 @@ class ServeEngine:
         for i in range(n_tokens - 1):
             pos = jnp.full((b,), s + i, jnp.int32)
             k = jax.random.fold_in(key, i) if fold_step_keys else key
-            nxt, cache = dec(params, cache, nxt, pos, k, *extra)
+            nxt, cache = dec(params, cache, nxt, pos, *bt, k, *extra)
             out.append(nxt)
         return jnp.stack(out, axis=1)  # (B, n_tokens)

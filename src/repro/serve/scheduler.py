@@ -76,6 +76,7 @@ from ..models.decode import CHUNKED_PREFILL_ARCHS, DecodeSpec
 from ..models.transformer import Model
 from .engine import (ServeEngine, make_sample_params, prefill_bucket_for,
                      prefill_bucket_sizes)
+from .kv_pool import BlockPool, PoolExhausted, prefix_keys
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,6 +128,10 @@ class _Slot:
     n_out: int  # tokens generated so far (incl. the prefill token)
     pf_off: int = 0  # prompt tokens already prefilled (chunked admission)
     prefilling: bool = False  # True until the last chunk lands
+    # paged-pool bookkeeping (spec.paged only)
+    pkeys: Optional[list] = None  # chained prefix keys of the full prompt blocks
+    n_registered: int = 0  # prompt blocks already published to the prefix table
+    reserve: int = 0  # worst-case future block allocs still owed to this lane
 
 
 @partial(jax.jit, donate_argnums=(0,))
@@ -170,7 +175,9 @@ class ContinuousScheduler:
                  gather_key: Optional[jax.Array] = None,
                  batch_builder: Optional[Callable] = None,
                  prefill_chunk: int = 0, prefill_buckets: int = 4,
-                 prefill_interleave: int = 1):
+                 prefill_interleave: int = 1,
+                 kv_quant_bits: int = 0, kv_quant_horizon: int = 0,
+                 kv_prefix_share: bool = True):
         self.model = model
         self.mesh = mesh
         self.spec = spec
@@ -185,6 +192,10 @@ class ContinuousScheduler:
             raise ValueError(
                 f"prefill_chunk must be >= 0 (0 = blocking admission), "
                 f"got {prefill_chunk}")
+        if spec.paged and not self.prefill_chunk:
+            raise ValueError(
+                "paged DecodeSpec(kv_block_size > 0) requires chunked "
+                "admission; pass prefill_chunk > 0")
         self.prefill_interleave = max(int(prefill_interleave), 1)
         if self.prefill_chunk:
             if model.cfg.arch_type not in CHUNKED_PREFILL_ARCHS:
@@ -203,6 +214,26 @@ class ContinuousScheduler:
                                             batch_sharded=False)
         self.prefill_engine = ServeEngine(model, mesh, self._pf_spec,
                                           params=params)
+
+        # paged pool (spec.paged): block tables map each lane's logical
+        # block index -> physical pool block; every valid table entry holds
+        # exactly one pool reference (alloc = 1, prefix lookup = +1)
+        self.pool: Optional[BlockPool] = None
+        self.block_tables: Optional[np.ndarray] = None
+        self._reserved = 0  # sum of live lanes' worst-case future allocs
+        self.prefix_share = bool(kv_prefix_share)  # A/B knob (bench)
+        if spec.paged:
+            structs, _ = self.engine.dm.cache_struct()
+            ks = structs["k"]
+            hot = (int(np.prod((ks.shape[0], spec.kv_block_size)
+                               + tuple(ks.shape[3:])))
+                   * jnp.dtype(ks.dtype).itemsize * 2)
+            self.pool = BlockPool(
+                spec.pool_blocks(), spec.kv_block_size,
+                quant_bits=kv_quant_bits, quant_horizon=kv_quant_horizon,
+                hot_block_bytes=hot)
+            self.block_tables = np.full(
+                (self.B, spec.blocks_per_slot), -1, np.int32)
 
         self.cache = self.engine.init_cache()
         self.queue: deque[Request] = deque()
@@ -242,9 +273,16 @@ class ContinuousScheduler:
         if self.spec.cache_len and len(req.prompt) > self.spec.cache_len:
             raise ValueError(
                 f"request {req.rid!r}: prompt ({len(req.prompt)}) exceeds the "
-                f"KV ring ({self.spec.cache_len})")
+                f"logical KV window ({self.spec.cache_len})")
         if req.max_new_tokens < 1:
             raise ValueError(f"request {req.rid!r}: max_new_tokens must be >= 1")
+        if self.pool is not None and self._lane_need(req) > self.pool.n_blocks:
+            # paged admission queues on transient pool pressure, but a
+            # request whose worst case exceeds the WHOLE pool can never run
+            raise ValueError(
+                f"request {req.rid!r}: needs up to {self._lane_need(req)} KV "
+                f"blocks but the pool holds {self.pool.n_blocks}; raise "
+                "--kv-pool-blocks")
         self._submit_meta[req.rid] = (self.step_count, time.perf_counter())
         self._out[req.rid] = []
         self.queue.append(req)
@@ -277,6 +315,101 @@ class ContinuousScheduler:
         self.top_k[slot_i] = req.top_k
         self.keys[slot_i] = np.asarray(jax.random.PRNGKey(req.seed), np.uint32)
 
+    # -- paged-pool bookkeeping (spec.paged) ---------------------------------
+
+    def _lane_need(self, req: Request) -> int:
+        """Worst-case number of pool blocks a lane running `req` ever
+        allocates: its whole footprint when it fits the window, the full
+        per-slot table otherwise (a wrapping lane COW-forks every shared
+        block, so sharing buys it nothing in the worst case)."""
+        bs, bps = self.spec.kv_block_size, self.spec.blocks_per_slot
+        total = len(req.prompt) + req.max_new_tokens
+        return bps if total > self.spec.cache_len else -(-total // bs)
+
+    def _lane_alloc(self, st: _Slot) -> int:
+        bid = self.pool.alloc(self.step_count)
+        if st.reserve > 0:
+            st.reserve -= 1
+            self._reserved -= 1
+        return bid
+
+    def _prefix_attach(self, slot_i: int, st: _Slot) -> None:
+        """Walk the prompt's prefix-key chain and share every consecutive
+        hit (hot or cold-rehydrated) read-only; the lane skips prefilling
+        the shared tokens.  Sharing is truncated so the skipped span is a
+        whole number of prefill chunks AND at least one prompt token
+        remains — the lane's remaining chunks then land at the same offsets
+        as its solo chunk decomposition, which is what keeps shared-prefix
+        streams bit-identical to solo runs."""
+        req, C, bs = st.req, self.prefill_chunk, self.spec.kv_block_size
+        taken: list[int] = []  # bids, one NEW reference each
+        for key in st.pkeys:
+            bid = self.pool.lookup(key, self.step_count)
+            if bid is None and self.pool.lookup_cold(key) is not None:
+                try:
+                    bid, self.cache = self.engine.rehydrate_block(
+                        self.cache, self.pool, key, self.step_count)
+                except PoolExhausted:
+                    bid = None
+            if bid is None:
+                break
+            taken.append(bid)
+        n = len(taken)
+        while n and not ((n * bs) % C == 0 and n * bs < len(req.prompt)):
+            n -= 1
+        for bid in taken[n:]:
+            self.pool.decref(bid, self.step_count)
+        for j, bid in enumerate(taken[:n]):
+            self.block_tables[slot_i, j] = bid
+        st.pf_off = n * bs
+        st.n_registered = n
+
+    def _release_lane_blocks(self, slot_i: int) -> None:
+        """Retirement: drop the lane's reference on every table entry —
+        registered prompt blocks fall into deferred reclaim (LRU cache),
+        generated-token blocks free immediately — and return its unused
+        reservation."""
+        st = self.slots[slot_i]
+        if st is not None and st.reserve:
+            self._reserved -= st.reserve
+            st.reserve = 0
+        for b in self.block_tables[slot_i]:
+            if b >= 0:
+                self.pool.decref(int(b), self.step_count)
+        self.block_tables[slot_i] = -1
+
+    def _prepare_decode_block(self, slot_i: int) -> None:
+        """Before a lane's next decode write at pos p: make sure the target
+        logical block has a writable private physical block.  Fresh logical
+        blocks allocate; on ring wrap into a SHARED block (ref > 1) the lane
+        COW-forks and device-copies the bytes first (other readers keep the
+        original); wrapping a block it registered itself withdraws it from
+        the prefix table (its content is about to change)."""
+        st = self.slots[slot_i]
+        p = int(self.pos[slot_i])
+        w, bs = self.spec.cache_len, self.spec.kv_block_size
+        j = (p % w) // bs
+        b = int(self.block_tables[slot_i, j])
+        if b < 0:
+            self.block_tables[slot_i, j] = self._lane_alloc(st)
+        elif p >= w and p % bs == 0:
+            if self.pool.ref(b) > 1:
+                new = self.pool.cow_fork(b, self.step_count)
+                if st.reserve > 0:
+                    st.reserve -= 1
+                    self._reserved -= 1
+                _, _, copyb = self.engine.kv_block_ops()
+                self.cache = copyb(self.cache, jnp.int32(b), jnp.int32(new))
+                self.block_tables[slot_i, j] = new
+            elif self.pool.is_registered(b):
+                self.pool.unregister(b)
+
+    def _bt_device(self) -> jax.Array:
+        # -1 (unallocated) entries are safe to ship raw: gathers clip them
+        # and the position-validity math masks those logical slots, writes
+        # only ever target allocated blocks
+        return jnp.asarray(self.block_tables)
+
     def _emit(self, events: list, slot_i: int, token: int) -> None:
         """Record one generated token for the slot's request; retire the
         slot when the request is done."""
@@ -304,6 +437,8 @@ class ContinuousScheduler:
                 first_token_step=ft_step,
                 first_token_time=ft_time,
             )
+            if self.pool is not None:
+                self._release_lane_blocks(slot_i)
             self.slots[slot_i] = None
             self._clear_lane(slot_i)
         else:
@@ -358,13 +493,41 @@ class ContinuousScheduler:
 
     def _assign_slots(self) -> None:
         """Move queued requests into free slots as `prefilling` occupants;
-        no model work happens here — chunks run in :meth:`_chunk_pass`."""
+        no model work happens here — chunks run in :meth:`_chunk_pass`.
+
+        Paged: admission is additionally gated on pool headroom — a request
+        only enters a slot when the pool's reclaimable blocks cover its
+        worst-case footprint on top of what already-admitted lanes may
+        still claim (so no lane can deadlock mid-flight on an empty pool);
+        otherwise it QUEUES, however long its prompt.  Admission then walks
+        the prompt's prefix chain and shares every cached block read-only,
+        skipping that span's prefill entirely."""
         for slot_i in self._free_slots():
             if not self.queue:
                 return
-            req = self.queue.popleft()
-            self.slots[slot_i] = _Slot(req=req, n_out=0, prefilling=True)
+            req = self.queue[0]
+            if self.pool is not None:
+                need = self._lane_need(req)
+                if self.pool.free_blocks - self._reserved < need:
+                    return  # pool pressure: keep queued (FIFO, no skip-ahead)
+            self.queue.popleft()
+            st = _Slot(req=req, n_out=0, prefilling=True)
+            self.slots[slot_i] = st
             self._admit_step[req.rid] = self.step_count
+            if self.pool is not None:
+                st.pkeys = prefix_keys(req.prompt, self.spec.kv_block_size)
+                st.reserve = need
+                self._reserved += need
+                if self.prefix_share:
+                    self._prefix_attach(slot_i, st)
+                wraps = (len(req.prompt) + req.max_new_tokens
+                         > self.spec.cache_len)
+                if st.pf_off and not wraps:
+                    # shared blocks the lane will never allocate (a wrapping
+                    # lane keeps the full reservation: it may COW-fork them)
+                    n_shared = st.pf_off // self.spec.kv_block_size
+                    st.reserve -= n_shared
+                    self._reserved -= n_shared
             # the lane keeps the dead sentinel until its last chunk lands
 
     def _chunk_pass(self, events: list) -> None:
@@ -397,6 +560,16 @@ class ContinuousScheduler:
                 temp[i] = st.req.temperature
                 top_k[i] = st.req.top_k
                 keys[i] = np.asarray(jax.random.PRNGKey(st.req.seed), np.uint32)
+            bt = ()
+            if self.pool is not None:
+                bs = self.spec.kv_block_size
+                for i in lanes:
+                    st = self.slots[i]
+                    for j in range(st.pf_off // bs,
+                                   -(-(st.pf_off + clen[i]) // bs)):
+                        if self.block_tables[i, j] < 0:
+                            self.block_tables[i, j] = self._lane_alloc(st)
+                bt = (self._bt_device(),)
             extra = ()
             if self.spec.sampling:
                 extra = ({"temp": jnp.asarray(temp),
@@ -404,8 +577,8 @@ class ContinuousScheduler:
                           "key": jnp.asarray(keys)},)
             nxt, self.cache = self.engine.prefill_chunk_step(bucket)(
                 self.params, self.cache, jnp.asarray(tokens),
-                jnp.asarray(offset), jnp.asarray(n_valid), self.gather_key,
-                *extra)
+                jnp.asarray(offset), jnp.asarray(n_valid), *bt,
+                self.gather_key, *extra)
             self.prefill_chunk_count += 1
             self._pf_shapes.add(bucket)
             self._max_pf_tokens = max(self._max_pf_tokens, bucket)
@@ -413,6 +586,16 @@ class ContinuousScheduler:
             for i in lanes:
                 st = self.slots[i]
                 st.pf_off += clen[i]
+                if self.pool is not None and self.prefix_share:
+                    # publish every prompt block this chunk completed (all
+                    # chunk offsets are multiples of the chunk size from 0,
+                    # so the block bytes are the canonical decomposition's)
+                    full = min(st.pf_off // self.spec.kv_block_size,
+                               len(st.pkeys))
+                    for j in range(st.n_registered, full):
+                        self.pool.register(st.pkeys[j],
+                                           int(self.block_tables[i, j]))
+                    st.n_registered = max(st.n_registered, full)
                 if st.pf_off >= len(st.req.prompt):
                     finishing.append(i)
             if finishing:
@@ -445,6 +628,16 @@ class ContinuousScheduler:
                   if s is not None and not s.prefilling]
         if not active:
             return events
+        bt = ()
+        if self.pool is not None:
+            for i in active:
+                self._prepare_decode_block(i)
+            if self.pool.quant_horizon > 0 and self.pool.quant_cfg:
+                # quantized cold tier: idle cached prefix blocks re-encode
+                # into the core.quant wire format, freeing their hot block
+                self.engine.demote_cold_blocks(self.cache, self.pool,
+                                               self.step_count)
+            bt = (self._bt_device(),)
         extra = ()
         if self.spec.sampling:
             extra = ({"temp": jnp.asarray(self.temp),
@@ -452,7 +645,7 @@ class ContinuousScheduler:
                       "key": jnp.asarray(self.keys)},)
         nxt, self.cache = self.engine.decode_step()(
             self.params, self.cache, jnp.asarray(self.tok),
-            jnp.asarray(self.pos), self.gather_key, *extra)
+            jnp.asarray(self.pos), *bt, self.gather_key, *extra)
         nxt = np.asarray(jax.device_get(nxt))
         self.step_count += 1
         self.occupancy_sum += len(active)
@@ -477,7 +670,8 @@ class ContinuousScheduler:
         return self.finished
 
     def stats(self) -> dict:
-        return {
+        d = self.pool.capacity_stats() if self.pool is not None else {}
+        return d | {
             "decode_steps": self.step_count,
             "prefills": self.prefill_count,
             "prefill_chunks": self.prefill_chunk_count,

@@ -1,0 +1,196 @@
+"""Property suite for the paged KV block pool (serve.kv_pool): random
+alloc/free/incref/register op sequences never double-free or leak a block,
+chained prefix keys never alias distinct prefixes, copy-on-write preserves
+every other reader's reference, and the quantized cold tier's
+encode_block/decode_block round-trip matches the core.quant
+quantize_dequantize reference bit-for-bit.
+
+Runs with real `hypothesis` when installed, or with the deterministic
+seeded-sweep stub in tests/_hypothesis_stub.py (installed by conftest.py).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.serve.kv_pool import (
+    BlockPool,
+    PoolExhausted,
+    block_qdq_reference,
+    decode_block,
+    encode_block,
+    kv_quant_config,
+    prefix_keys,
+)
+
+
+# ---------------------------------------------------------------------------
+# alloc / free / refcount: no double-free, no leak, exact conservation
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 10_000), n_blocks=st.integers(2, 12),
+       n_ops=st.integers(1, 120))
+def test_pool_never_leaks_or_double_frees(seed, n_blocks, n_ops):
+    rng = np.random.default_rng(seed)
+    pool = BlockPool(n_blocks, 8)
+    held = []  # one entry per live reference we hold
+    registered = 0
+    for step in range(n_ops):
+        op = int(rng.integers(0, 4))
+        if op == 0:
+            try:
+                held.append(pool.alloc(step))
+            except PoolExhausted:
+                assert pool.free_blocks == 0
+        elif op == 1 and held:
+            pool.decref(held.pop(int(rng.integers(len(held)))), step)
+        elif op == 2 and held:
+            bid = held[int(rng.integers(len(held)))]
+            pool.incref(bid)
+            held.append(bid)
+        elif op == 3 and held:
+            pool.register(("k", registered),
+                          held[int(rng.integers(len(held)))])
+            registered += 1
+        pool.check_invariants()
+        # conservation: every block is exactly one of free / cached / live
+        assert (len(pool._free) + pool.blocks_cached + pool.blocks_in_use
+                == n_blocks)
+        # the pool's refcounts mirror our reference model exactly
+        assert sorted(set(held)) == [int(b) for b in
+                                     np.nonzero(pool._ref > 0)[0]]
+        for bid in set(held):
+            assert pool.ref(bid) == held.count(bid)
+    # drain: every held reference releases cleanly, nothing leaks
+    for bid in list(held):
+        pool.decref(bid, n_ops)
+    pool.check_invariants()
+    assert pool.free_blocks == n_blocks
+    if held:  # one decref past zero is a double free and must raise
+        with pytest.raises(RuntimeError, match="double free"):
+            pool.decref(held[0], n_ops)
+
+
+def test_alloc_exhaustion_raises():
+    pool = BlockPool(1, 4)
+    pool.alloc()
+    with pytest.raises(PoolExhausted):
+        pool.alloc()
+
+
+def test_alloc_evicts_lru_cached():
+    pool = BlockPool(2, 4)
+    a = pool.alloc(0)
+    pool.register(("a",), a)
+    pool.decref(a, 0)
+    b = pool.alloc(1)
+    pool.register(("b",), b)
+    pool.decref(b, 1)
+    # both retired into deferred reclaim; a new alloc evicts the LRU first
+    assert pool.alloc(2) == a
+    assert pool.lookup(("a",)) is None  # evicted key no longer resolves
+    assert pool.lookup(("b",), 2) == b  # MRU survives and re-pins
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# prefix keys: chained structural keys are alias-free by construction
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 10_000), bs=st.sampled_from([2, 4, 8]),
+       n=st.integers(1, 6))
+def test_prefix_keys_never_alias(seed, bs, n):
+    rng = np.random.default_rng(seed)
+    # tiny vocab on purpose: per-block token collisions are common, so a
+    # digest-style key WOULD alias here — chained keys must not
+    a = rng.integers(0, 4, size=n * bs).tolist()
+    b = rng.integers(0, 4, size=n * bs).tolist()
+    ka, kb = prefix_keys(a, bs), prefix_keys(b, bs)
+    assert len(ka) == len(kb) == n
+    for j in range(n):
+        assert (ka[j] == kb[j]) == (a[:(j + 1) * bs] == b[:(j + 1) * bs])
+    # keys within one prompt are all distinct (chain depth differs)
+    assert len(set(ka)) == n
+    # a partial trailing block never gets a key
+    assert len(prefix_keys(a + [1], bs)) == n
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write: the fork moves ONLY the writer's reference
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(readers=st.integers(1, 5))
+def test_cow_preserves_shared_refs(readers):
+    pool = BlockPool(8, 4)
+    bid = pool.alloc()
+    pool.register(("sys",), bid)
+    for _ in range(readers):
+        assert pool.lookup(("sys",)) == bid
+    new = pool.cow_fork(bid)  # the original writer goes private
+    assert new != bid
+    assert pool.ref(bid) == readers  # every reader's reference intact
+    assert pool.ref(new) == 1
+    assert pool.lookup(("sys",)) == bid  # registry still serves the shared id
+    assert pool.stats["cow_forks"] == 1
+    pool.decref(bid)
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# quantized cold tier: wire round-trip == quantize_dequantize, bit-exact
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), bits=st.sampled_from([2, 4, 8]),
+       bucket=st.sampled_from([32, 128]), bs=st.sampled_from([4, 8]),
+       nl=st.integers(1, 3))
+def test_cold_tier_roundtrip_bit_exact(seed, bits, bucket, bs, nl):
+    rng = np.random.default_rng(seed)
+    cfg = kv_quant_config(bits, bucket)
+    shape = (nl, bs, 2, 16)
+    k = (rng.standard_normal(shape) * 3).astype(np.float32)
+    v = rng.standard_normal(shape).astype(np.float32)
+    cold = encode_block(k, v, cfg)
+    kd, vd = decode_block(cold, dtype=jnp.float32)
+    assert np.array_equal(np.asarray(kd), block_qdq_reference(k, cfg))
+    assert np.array_equal(np.asarray(vd), block_qdq_reference(v, cfg))
+    # and encoding is deterministic: same bytes every time (nearest mode)
+    again = encode_block(k, v, cfg)
+    assert np.array_equal(cold.k_wire, again.k_wire)
+    assert np.array_equal(cold.v_wire, again.v_wire)
+
+
+@settings(max_examples=30, deadline=None)
+@given(horizon=st.integers(1, 4), idle=st.integers(0, 8))
+def test_demote_rehydrate_state_machine(horizon, idle):
+    pool = BlockPool(4, 4, quant_bits=4, quant_horizon=horizon,
+                     hot_block_bytes=1024)
+    bid = pool.alloc(0)
+    pool.register(("p",), bid)
+    pool.decref(bid, 0)  # retire into deferred reclaim
+    assert pool.blocks_cached == 1
+    dem = pool.demotable(idle)
+    assert (bid in dem) == (idle >= horizon)
+    if dem:
+        cold = encode_block(np.ones((1, 4, 1, 8), np.float32),
+                            np.ones((1, 4, 1, 8), np.float32), pool.quant_cfg)
+        pool.demote(bid, cold, idle)
+        pool.check_invariants()
+        assert pool.cold_blocks == 1 and pool.blocks_cached == 0
+        assert pool.lookup(("p",)) is None  # cold never hits the hot path
+        assert pool.lookup_cold(("p",)) is cold
+        nbid, got = pool.rehydrate(("p",), idle + 1)
+        assert got is cold and pool.cold_blocks == 0
+        assert pool.ref(nbid) == 1 and pool.is_registered(nbid)
+        pool.check_invariants()
+        pool.decref(nbid, idle + 1)
+    pool.check_invariants()

@@ -369,3 +369,26 @@ def test_eos_frees_slot_early():
     for r, got in zip(reqs[1:], outs[1:]):
         np.testing.assert_array_equal(
             got, solo_tokens("dense", r.prompt, r.max_new_tokens))
+
+
+def test_paged_pool_capacity_validation():
+    """Satellite: with the paged pool the submit-time bound is pool blocks,
+    not ring length — the solo path raises a clear PoolExhausted when the
+    lanes cannot all fit, and both entry points insist on chunked prefill
+    (paged serving has no whole-prompt float path)."""
+    from repro.serve.kv_pool import PoolExhausted
+
+    m, params = model_and_params("dense")
+    # batch 2 x 4 blocks/slot = 8 blocks needed; the pool holds one row (4)
+    pspec = DecodeSpec(cache_len=RING, batch_global=2, batch_sharded=False,
+                       sampling=True, kv_block_size=8, kv_pool_blocks=4)
+    with pytest.raises(ValueError, match="chunked admission"):
+        ContinuousScheduler(m, MESH, pspec, params, gather_key=GATHER_KEY)
+    eng = ServeEngine(m, MESH, pspec)
+    prompt = {"tokens": jnp.ones((2, 4), jnp.int32)}
+    with pytest.raises(ValueError, match="chunked prefill"):
+        eng.generate(params, prompt, {"tokens": P(None)}, n_tokens=2,
+                     key=GATHER_KEY, fold_step_keys=False)
+    with pytest.raises(PoolExhausted, match="kv-pool-blocks"):
+        eng.generate(params, prompt, {"tokens": P(None)}, n_tokens=2,
+                     key=GATHER_KEY, fold_step_keys=False, prefill_chunk=4)
