@@ -11,6 +11,13 @@ policy:
   qsdp-rowquant-wire   W8 gathers consumed in wire-code form by the fused
                        rowquant matmul (dense-MLP weights never dequantized
                        to HBM)
+  qsdp-spec            self-speculative decode: a 4-bit rowquant
+                       re-quantization of the SAME weights drafts 4
+                       tokens/slot/step, the serving-precision model
+                       verifies them in one pooled launch — committed
+                       tokens are asserted bit-equal to the qsdp row,
+                       with accepted_per_launch > 1 and
+                       launches_per_token < 1 as CI tripwires
 
 Decode is FSDP-style — every step re-gathers the sharded weights — so step
 latency is collective-bound and the gather wire bytes per decode step are
@@ -71,6 +78,19 @@ from jax.sharding import PartitionSpec as P
 from repro.core.qsdp import QSDPConfig
 from repro.models.config import ModelConfig
 from repro.serve import ContinuousScheduler, Request, build_serve_setup
+
+
+def _round_floats(obj, ndigits=4):
+    """Round every float in a JSON tree to `ndigits` decimals so the
+    emitted artifact is stable to read and diff (no
+    4.6499999999999995-style repr noise from ratio arithmetic)."""
+    if isinstance(obj, float):
+        return round(obj, ndigits)
+    if isinstance(obj, dict):
+        return {k: _round_floats(v, ndigits) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_round_floats(v, ndigits) for v in obj]
+    return obj
 
 
 def variants():
@@ -149,14 +169,16 @@ def replay(sched, trace, max_steps=100_000):
 
 def bench_variant(name, qsdp, rowquant, mcfg, trace, slots,
                   prefill_chunk=0, prefill_buckets=4, kv_block_size=0,
-                  kv_quant_bits=0, kv_quant_horizon=0, kv_prefix_share=True):
+                  kv_quant_bits=0, kv_quant_horizon=0, kv_prefix_share=True,
+                  draft_bits=0, draft_depth=0):
     prompt_lens = sorted({len(r.prompt) for _, r in trace})
     gen0 = trace[0][1].max_new_tokens
     setup = build_serve_setup(
         mcfg, data_par=2, model_par=4, qsdp=qsdp, batch=slots,
         prompt_len=max(prompt_lens),
         gen=max(r.max_new_tokens for _, r in trace), rowquant_mlp=rowquant,
-        kv_block_size=kv_block_size)
+        kv_block_size=kv_block_size,
+        draft_bits=draft_bits, draft_depth=draft_depth)
     sched = ContinuousScheduler(setup.model, setup.mesh, setup.spec,
                                 setup.params,
                                 gather_key=jax.random.PRNGKey(42),
@@ -169,19 +191,21 @@ def bench_variant(name, qsdp, rowquant, mcfg, trace, slots,
     # warmup: compile decode + one prefill per distinct prompt length
     # (blocking) / per chunk bucket (chunked: one prompt of each bucket
     # length, run one at a time so every bucket's launch compiles before
-    # the timed replay)
+    # the timed replay); speculative variants warm at full generation
+    # length so the deeper draft/verify launch shapes compile too
+    warm_gen = gen0 if setup.spec.speculative else min(gen0, 2)
     t0 = time.perf_counter()
     if prefill_chunk:
         for j, blen in enumerate(sched.buckets):
             sched.submit(Request(rid=f"warm{j}",
                                  prompt=list(range(1, blen + 1)),
-                                 max_new_tokens=min(gen0, 2), seed=0))
+                                 max_new_tokens=warm_gen, seed=0))
             sched.run()
     else:
         for j, plen in enumerate(prompt_lens):
             sched.submit(Request(rid=f"warm{j}",
                                  prompt=list(range(1, plen + 1)),
-                                 max_new_tokens=min(gen0, 2), seed=0))
+                                 max_new_tokens=warm_gen, seed=0))
         sched.run()
     compile_s = time.perf_counter() - t0
 
@@ -195,8 +219,17 @@ def bench_variant(name, qsdp, rowquant, mcfg, trace, slots,
     ttft_s = [c.first_token_time - c.submit_time for c in done.values()]
     tokens = st["tokens_generated"] - base["tokens_generated"]
     steps = st["decode_steps"] - base["decode_steps"]
-    occ = ((st["mean_occupancy"] * st["decode_steps"]
-            - base["mean_occupancy"] * base["decode_steps"]) / max(steps, 1))
+    occ = ((st["lane_steps"] - base["lane_steps"]) / max(steps, 1))
+    # launch accounting over the timed replay only (warmup deltas out),
+    # normalized per lane so it is batch-composition independent: 1.0 =
+    # one serving-precision lane-step per decoded token (non-speculative
+    # decode by construction), < 1.0 = speculation committing > 1
+    dec_tokens = max(1, tokens - (st["prefills"] - base["prefills"]))
+    lpt = (st["lane_steps"] - base["lane_steps"]) / dec_tokens
+    spec_ls = st["spec_lane_steps"] - base["spec_lane_steps"]
+    apl = ((st["spec_tokens"] - base["spec_tokens"]) / spec_ls
+           if spec_ls else 0.0)
+    draft_oh = (st["draft_lane_steps"] - base["draft_lane_steps"]) / dec_tokens
     return {
         "compile_s": round(compile_s, 1),
         "wall_s": round(wall_s, 2),
@@ -211,6 +244,12 @@ def bench_variant(name, qsdp, rowquant, mcfg, trace, slots,
         "ttft_s_p95": round(float(np.percentile(ttft_s, 95)), 3),
         "mean_occupancy": round(occ, 2),
         "slots": slots,
+        "launches_per_token": round(lpt, 4),
+        "accepted_per_launch": round(apl, 4),
+        "draft_overhead": round(draft_oh, 4),
+        "draft_launches": int(st["draft_launches"] - base["draft_launches"]),
+        "verify_launches": int(st["verify_launches"]
+                               - base["verify_launches"]),
         "gather_bytes_per_decode_step": int(setup.decode_gather_bytes()),
         "prefill_chunk": prefill_chunk,
         "prefill_traces": int(st["prefill_traces"]),
@@ -284,15 +323,20 @@ def main(argv=None):
     outputs = {}
 
     def show(name, r):
+        spec = (f"  acc/launch {r['accepted_per_launch']:.2f}  "
+                f"draft-oh {r['draft_overhead']:.2f}"
+                if r["verify_launches"] else "")
         print(f"{name:20s} {r['tokens_per_s']:8.1f} tok/s  "
               f"step {r['step_ms_mean']:7.1f}ms  "
               f"lat p50/p95 {r['latency_steps_p50']:.0f}/"
               f"{r['latency_steps_p95']:.0f} steps  "
               f"ttft p95 {r['ttft_s_p95']:.3f}s  "
               f"occ {r['mean_occupancy']:.2f}/{r['slots']}  "
+              f"l/tok {r['launches_per_token']:.2f}  "
               f"pf {r['prefill_traces']} traces/"
               f"{r['max_prefill_launch_tokens']} tok-stall  "
-              f"gather {r['gather_bytes_per_decode_step'] / 2**20:.2f} MiB/step")
+              f"gather {r['gather_bytes_per_decode_step'] / 2**20:.2f} "
+              f"MiB/step{spec}")
 
     for name, v in variants().items():
         r, toks, _ = bench_variant(name, v["qsdp"], v["rowquant"], mcfg,
@@ -300,6 +344,24 @@ def main(argv=None):
         out["variants"][name] = r
         outputs[name] = toks
         show(name, r)
+
+    # self-speculative decoding over the SAME trace and qsdp wire policy:
+    # the 4-bit rowquant re-quantization of the serving weights drafts 4
+    # tokens per slot per step, the serving-precision model verifies them
+    # in one pooled launch.  CI tripwires: committed tokens bit-equal the
+    # non-speculative qsdp row (speculation is a pure launch-count
+    # optimization), > 1 token committed per verify launch, and < 1
+    # serving-precision lane-step per decoded token.
+    r, toks, _ = bench_variant("qsdp-spec", QSDPConfig(min_quant_size=256),
+                               False, mcfg, trace, args.slots,
+                               draft_bits=4, draft_depth=4)
+    out["variants"]["qsdp-spec"] = r
+    outputs["qsdp-spec"] = toks
+    show("qsdp-spec", r)
+    assert outputs["qsdp-spec"] == outputs["qsdp"], \
+        "speculative decode changed a request's committed tokens"
+    assert r["accepted_per_launch"] > 1, r["accepted_per_launch"]
+    assert r["launches_per_token"] < 1, r["launches_per_token"]
 
     # long-prompt trace: blocking vs chunked admission over the SAME qsdp
     # wire policy (chunked is the fix for per-length retraces + prefill
@@ -462,6 +524,12 @@ def main(argv=None):
         "cold_matches_paged_tokens": True,
         "cold_compression": round(cold_ratio, 2),
         "cold_blocks": int(st_cold["cold_blocks"]),
+        "spec_matches_qsdp_tokens": True,
+        "spec_accepted_per_launch": out["variants"]["qsdp-spec"][
+            "accepted_per_launch"],
+        "spec_launches_per_token": out["variants"]["qsdp-spec"][
+            "launches_per_token"],
+        "spec_draft_overhead": out["variants"]["qsdp-spec"]["draft_overhead"],
     }
     print(f"qsdp ships {out['summary']['gather_bytes_ratio_qsdp_vs_baseline']:.3f}x "
           f"the baseline gather bytes per decode step at equal tokens")
@@ -475,9 +543,14 @@ def main(argv=None):
           f"{nosh['prefill_launches']} unshared at identical tokens; cold "
           f"tier holds {st_cold['cold_blocks']} blocks at "
           f"{cold_ratio:.1f}x fewer resident bytes")
+    sp = out["variants"]["qsdp-spec"]
+    print(f"speculative: {sp['accepted_per_launch']:.2f} tokens/verify "
+          f"launch, {sp['launches_per_token']:.2f} launches/token "
+          f"(draft overhead {sp['draft_overhead']:.2f}) at tokens bit-equal "
+          f"to non-speculative qsdp")
 
     with open(args.out, "w") as f:
-        json.dump(out, f, indent=1)
+        json.dump(_round_floats(out), f, indent=1)
     print(f"wrote {args.out}")
     return 0
 

@@ -215,5 +215,64 @@ for arch_kw in (dict(arch_type="dense", n_layers=2, d_model=64,
                                  outs[False][r.rid].tokens)
                   for r in reqs5) and hits > 0, f"prefix_hits={hits}")
 
+        # self-speculative decode on the 8-device mesh: the 4-bit draft
+        # forward and the pooled multi-token verify both run sharded (the
+        # verify's per-token ring writes and chunk psum cross the 4-way
+        # model axis).  Mixed max_new_tokens + staggered retirement give
+        # heterogeneous per-slot draft depths (n_spec mixes 1..draft_depth
+        # in one launch); committed tokens must bit-match the
+        # NON-speculative solo reference on the ring AND paged paths, and
+        # speculation must actually engage (verify launches, > 0 committed
+        # speculative tokens).
+        rng6 = np.random.default_rng(6)
+        reqs6 = [Request(rid=f"sp{i}",
+                         prompt=rng6.integers(0, VOCAB, size=int(pl)).tolist(),
+                         max_new_tokens=int(g), temperature=t, top_k=k,
+                         seed=200 + i)
+                 for i, (pl, g, t, k) in enumerate(
+                     [(4, 6, 0.0, 0), (8, 2, 0.0, 0), (6, 5, 0.9, 4),
+                      (5, 1, 0.0, 0), (7, 4, 0.0, 0), (6, 3, 1.1, 0)])]
+        for mode, dspec, ref_eng, ref_kw in (
+                ("ring",
+                 DecodeSpec(cache_len=RING, batch_global=4,
+                            batch_sharded=True, sampling=True,
+                            draft_bits=4, draft_depth=3),
+                 solo, {}),
+                ("paged",
+                 DecodeSpec(cache_len=RING, batch_global=4,
+                            batch_sharded=False, sampling=True,
+                            kv_block_size=8, draft_bits=4, draft_depth=3),
+                 solo_p, dict(prefill_chunk=8, prefill_buckets=3))):
+            s6 = ContinuousScheduler(m, mesh, dspec, params,
+                                     gather_key=GATHER_KEY, **ref_kw)
+            for r in reqs6:
+                s6.submit(Request(rid=r.rid, prompt=r.prompt,
+                                  max_new_tokens=r.max_new_tokens,
+                                  temperature=r.temperature, top_k=r.top_k,
+                                  seed=r.seed))
+            done6 = s6.run()
+            st6 = s6.stats()
+            worst = ""
+            ok = True
+            for r in reqs6:
+                sample = make_sample_params(r.temperature, r.top_k, r.seed)
+                ref = np.asarray(jax.device_get(ref_eng.generate(
+                    params,
+                    {"tokens": jnp.asarray(
+                        np.asarray(r.prompt, np.int32)[None])},
+                    {"tokens": P(None)}, n_tokens=r.max_new_tokens,
+                    key=GATHER_KEY, sample=sample, fold_step_keys=False,
+                    **ref_kw)))[0]
+                if not np.array_equal(done6[r.rid].tokens, ref):
+                    ok = False
+                    worst = (f"{r.rid}: got={done6[r.rid].tokens.tolist()} "
+                             f"ref={ref.tolist()}")
+            check(f"sched-speculative-vs-solo-{mode}", ok, worst)
+            check(f"sched-speculative-engaged-{mode}",
+                  st6["verify_launches"] > 0 and st6["spec_tokens"] > 0
+                  and st6["accepted_per_launch"] > 0,
+                  f"acc/launch={st6['accepted_per_launch']:.2f} "
+                  f"l/tok={st6['launches_per_token']:.2f}")
+
 print("ALL-OK" if not FAIL else f"FAILED: {FAIL}")
 sys.exit(0 if not FAIL else 1)

@@ -71,7 +71,8 @@ from jax.sharding import PartitionSpec as P
 from ..compat import axis_size
 from ..kernels.ops import RowQuantWeight
 from . import collectives as coll
-from .quant import QuantConfig, QuantizedParam, quantize, wire_unpack
+from .quant import (QuantConfig, QuantizedParam, dequantize, quantize,
+                    unpack_codes, wire_unpack)
 
 # ---------------------------------------------------------------------------
 # Mesh description
@@ -675,10 +676,13 @@ class QSDPEngine:
 
     def _rowquant_tiling_ok(self, spec: ParamSpec, cfg: QuantConfig) -> bool:
         """Do `cfg`'s buckets tile this weight's rows exactly?  2D (K, N)
-        tp-local shape, 8-bit codes (one byte per value on the wire), N a
-        multiple of the bucket size, and an FSDP shard that is a whole
-        number of buckets (no padding anywhere, so global bucket b covers
-        flat elements [b*bsz, (b+1)*bsz) of the row-major weight).
+        tp-local shape, a bit width whose packed codes unpack along bucket
+        boundaries (bucket_size % codes_per_byte == 0 — always true for the
+        packable widths 2/4/8, and sub-8-bit codes are unpacked to one byte
+        per value after the gather), N a multiple of the bucket size, and an
+        FSDP shard that is a whole number of buckets (no padding anywhere,
+        so global bucket b covers flat elements [b*bsz, (b+1)*bsz) of the
+        row-major weight).
 
         NB stacked (scan-over-layers) params are gathered one layer slice
         at a time, so shape/n here are already per-layer quantities."""
@@ -686,7 +690,7 @@ class QSDPEngine:
         n = spec.n_logical_local(self.ms.model_size)
         p = self.ms.fsdp_size
         return (
-            cfg.bits == 8
+            cfg.bucket_size % cfg.codes_per_byte == 0
             and not self.cfg.hierarchical
             and len(shape) == 2
             and shape[1] % cfg.bucket_size == 0
@@ -697,10 +701,16 @@ class QSDPEngine:
     def _assemble_rowquant(self, spec: ParamSpec, cfg: QuantConfig,
                            q) -> RowQuantWeight:
         """All-gather a shard's (codes, scale, zero) over FSDP and reshape
-        into the (K, N) / (K, n_seg) RowQuantWeight layout."""
+        into the (K, N) / (K, n_seg) RowQuantWeight layout.  Sub-8-bit codes
+        travel packed (the bits 2-8 wire format) and are unpacked to one
+        byte per value after the gather — bucket boundaries survive packing
+        (bucket_size % codes_per_byte == 0), so the unpacked bytes are the
+        row-major codes the fused rowquant matmul consumes."""
         codes = lax.all_gather(q.codes, self.ms.fsdp_axes, tiled=True)
         scale = lax.all_gather(q.scale, self.ms.fsdp_axes, tiled=True)
         zero = lax.all_gather(q.zero, self.ms.fsdp_axes, tiled=True)
+        if cfg.codes_per_byte > 1:
+            codes = unpack_codes(codes, cfg.bits)
         k_dim, n_dim = spec.tp_local_shape(self.ms.model_size)
         n_seg = n_dim // cfg.bucket_size
         return RowQuantWeight(
@@ -754,6 +764,26 @@ class QSDPEngine:
         caller guarantees :meth:`rowquant_wire_eligible`."""
         q = wire_unpack(qp.wire.reshape(-1), qp.n, qp.cfg)
         return self._assemble_rowquant(self.specs[name], qp.cfg, q)
+
+    def gather_wire_dequant(self, name: str, qp: QuantizedParam) -> jax.Array:
+        """Dense fallback for a wire-form parameter that the rowquant matmul
+        can't tile (attention projections, 3D expert stacks, odd buckets):
+        all-gather the packed wire segments over FSDP and dequantize each
+        shard's segment through the bits 2-8 kernels into the TP-local
+        tensor.  Each shard's [codes | scale | zero] segment is
+        self-contained (its own bucket padding included), so no alignment
+        between shards is required — this works for ANY per-leaf bucket
+        size (inference only: no VJP)."""
+        buf = lax.all_gather(qp.wire.reshape(-1), self.ms.fsdp_axes,
+                             tiled=True)
+        segs = buf.reshape(self.ms.fsdp_size, -1)
+
+        def dec(b):
+            return dequantize(wire_unpack(b, qp.n, qp.cfg)).reshape(-1)
+
+        full = (dec(segs[0]) if segs.shape[0] == 1
+                else jax.vmap(dec)(segs).reshape(-1))
+        return self._reshape_full(name, full)
 
     # -- host-side helpers ----------------------------------------------------
 

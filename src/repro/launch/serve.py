@@ -77,6 +77,15 @@ def parse_args(argv=None):
     ap.add_argument("--kv-quant-horizon", type=int, default=64,
                     help="--continuous paged: idle scheduler steps before a "
                          "cached block demotes to the cold tier")
+    # self-speculative decoding flags
+    ap.add_argument("--draft-bits", type=int, default=0,
+                    help="--continuous: bit width of the self-speculative "
+                         "draft forward (0 = off; 2-4 typical) — the draft "
+                         "re-quantizes the SAME weights, no second model")
+    ap.add_argument("--draft-depth", type=int, default=0,
+                    help="--continuous: draft up to this many tokens per "
+                         "slot per step, batch-verified in one "
+                         "serving-precision launch (<= 1 = off)")
     return ap.parse_args(argv)
 
 
@@ -121,6 +130,12 @@ def run_continuous(setup, args) -> int:
               f"{st['prefix_hit_rate']:.2f}, cow forks {st['cow_forks']}, "
               f"cold blocks {st['cold_blocks']} "
               f"(effective capacity {st['effective_capacity']:.0f} blocks)")
+    if setup.spec.speculative:
+        print(f"# speculative: draft {setup.spec.draft_bits}-bit x depth "
+              f"{setup.spec.draft_depth} -> accepted/launch "
+              f"{st['accepted_per_launch']:.2f}, launches/token "
+              f"{st['launches_per_token']:.2f}, draft overhead "
+              f"{st['draft_overhead']:.2f} draft lane-steps/token")
     print(f"# decode-step weight gathers = "
           f"{setup.decode_gather_bytes() / 2**20:.2f} MiB/device")
     first = done[sorted(done)[0]]
@@ -157,13 +172,20 @@ def main(argv=None):
     if args.kv_block_size and not args.prefill_chunk:
         raise SystemExit("--kv-block-size requires --prefill-chunk (paged "
                          "serving admits through chunked prefill)")
+    if (args.draft_bits > 0) != (args.draft_depth > 1):
+        raise SystemExit("speculative decode needs BOTH --draft-bits >= 2 "
+                         "and --draft-depth >= 2")
+    if args.draft_depth > 1 and not args.continuous:
+        raise SystemExit("--draft-depth requires --continuous (speculation "
+                         "lives in the scheduler's draft/verify phases)")
     setup = build_serve_setup(
         args.arch, data_par=args.data_par, model_par=args.model_par,
         smoke=args.smoke, qsdp=qsdp, batch=args.batch,
         prompt_len=args.prompt_len, gen=args.gen, seed=args.seed,
         sampling=args.continuous and (args.temperature > 0 or args.top_k > 1),
         kv_block_size=args.kv_block_size,
-        kv_pool_blocks=args.kv_pool_blocks)
+        kv_pool_blocks=args.kv_pool_blocks,
+        draft_bits=args.draft_bits, draft_depth=args.draft_depth)
     if args.continuous:
         return run_continuous(setup, args)
     return run_batch(setup, args)

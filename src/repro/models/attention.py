@@ -513,7 +513,17 @@ def decode_attend(
     the (R, S_row, ...) paged pool: each slot's blocks are gathered into
     logical ring order first (:func:`paged_gather_kv`), so the math below
     — and therefore every output bit — is independent of the physical
-    placement, sharing, or fragmentation of the table's blocks."""
+    placement, sharing, or fragmentation of the table's blocks.
+
+    Validity geometry is what makes multi-position speculative steps
+    safe with NO extra masking here: the draft rounds and the verify
+    pass (``DecodeModel.verify_fn``) leave stale draft-precision KV at
+    ring slots AHEAD of a lane's committed position, but slot ``s`` is
+    valid for a query at ``pos`` only when ``p_s <= pos`` (the ring-wrap
+    residue above is <= pos by construction), so a query can never read
+    a position it hasn't passed — and every caller that advances ``pos``
+    through a drafted position rewrites that slot's KV in its own
+    precision *before* the query reaches it (write-before-attend)."""
     b, hp, hd = q_all.shape
     rank = lax.axis_index(MODEL_AXIS)
     if block_tables is not None:

@@ -92,6 +92,17 @@ class DecodeSpec:
     # i.e. the same device bytes as the rings it replaces).  Rounded up to
     # whole pool rows of cache_len // kv_block_size blocks each.
     kv_pool_blocks: int = 0
+    # Self-speculative decoding: a `draft_bits`-bit forward of the SAME
+    # model (weights re-quantized from the resident wire codes) drafts up
+    # to `draft_depth` tokens per slot per step, then the serving-precision
+    # model scores all of them in ONE pooled `verify_fn` launch and commits
+    # the longest prefix the verifier agrees with.  Greedy (and sampled)
+    # streams are bit-identical to non-speculative decode by construction:
+    # every committed token is produced by the verifier with math
+    # elementwise identical to decode_fn.  draft_depth <= 1 disables
+    # speculation (plain one-token decode).
+    draft_bits: int = 0
+    draft_depth: int = 0
 
     def batch_pspec(self, ms) -> tuple:
         return (ms.fsdp_axes,) if self.batch_sharded else (None,)
@@ -99,6 +110,10 @@ class DecodeSpec:
     @property
     def paged(self) -> bool:
         return self.kv_block_size > 0
+
+    @property
+    def speculative(self) -> bool:
+        return self.draft_depth > 1 and self.draft_bits > 0
 
     @property
     def blocks_per_slot(self) -> int:
@@ -167,6 +182,13 @@ class DecodeModel:
                 raise ValueError(
                     f"cache_len ({spec.cache_len}) must be a multiple of "
                     f"kv_block_size ({spec.kv_block_size})")
+        if spec.speculative and cfg.arch_type not in CHUNKED_PREFILL_ARCHS:
+            raise ValueError(
+                f"speculative decode (draft_depth={spec.draft_depth}) "
+                f"supports {CHUNKED_PREFILL_ARCHS}, not {cfg.arch_type!r}")
+        if spec.draft_bits and not 2 <= spec.draft_bits <= 8:
+            raise ValueError(f"draft_bits must be in [2, 8], got "
+                             f"{spec.draft_bits}")
         self.s_loc = spec.cache_len // self.tp if spec.cache_len else 0
         self.b_loc = (
             spec.batch_global // ms.fsdp_size if spec.batch_sharded else spec.batch_global
@@ -413,9 +435,13 @@ class DecodeModel:
         and stay in code form through swiglu_mlp.
 
         Leaves that arrive as QuantizedParam (quantized train state /
-        checkpoint-v2 serving, prepared by ``serve.engine
-        .prepare_wire_params``) are all-gathered straight from their stored
-        codes (QSDPEngine.gather_rowquant_wire) — zero re-quantization."""
+        checkpoint-v2 serving, or a low-bit self-speculative draft built by
+        ``serve.engine.make_draft_params``) are all-gathered straight from
+        their stored codes — zero re-quantization: dense-MLP matmul weights
+        whose buckets tile their rows stay in code form
+        (QSDPEngine.gather_rowquant_wire -> rowquant_matmul), everything
+        else dequantizes densely through the bits 2-8 kernels
+        (QSDPEngine.gather_wire_dequant)."""
         m = self.m
         wire = [n for n in names if isinstance(lw[n], QuantizedParam)]
         rq = [n for n in names
@@ -425,7 +451,11 @@ class DecodeModel:
             f"{prefix}/", {n: lw[n] for n in names if n not in rq and n not in wire},
             lkey)
         for n in wire:
-            out[n] = m.engine.gather_rowquant_wire(f"{prefix}/{n}", lw[n])
+            if (n in self._ROWQUANT_MLP
+                    and m.engine.rowquant_wire_eligible(f"{prefix}/{n}", lw[n])):
+                out[n] = m.engine.gather_rowquant_wire(f"{prefix}/{n}", lw[n])
+            else:
+                out[n] = m.engine.gather_wire_dequant(f"{prefix}/{n}", lw[n])
         for n in rq:
             out[n] = m.engine.gather_rowquant(f"{prefix}/{n}", lw[n], lkey)
         return out
@@ -451,6 +481,106 @@ class DecodeModel:
             body, (x, cache["k"], cache["v"]), (jnp.arange(nl), grp))
         cache = dict(cache, k=k_new, v=v_new)
         return x, cache
+
+    # ------------------------------------------------------------------
+    # Speculative verify (score k draft tokens in one launch)
+    # ------------------------------------------------------------------
+
+    def verify_fn(self, params: Params, cache: Cache, tokens: jax.Array,
+                  pos: jax.Array, n_spec: jax.Array, key: jax.Array,
+                  sample: Optional[dict] = None,
+                  block_tables: Optional[jax.Array] = None
+                  ) -> tuple[jax.Array, Cache]:
+        """Serving-precision batch-verify of up to K drafted tokens per slot.
+
+        tokens (B_loc, K): token j of slot b is the token fed at position
+        pos[b] + j — row [t0, g1, .., g_{K-1}] where t0 is the slot's
+        current feed token and g_j its draft chain.  pos (B_loc,) is each
+        slot's feed position (< 0 = dead lane); n_spec (B_loc,) how many of
+        the K tokens the slot actually runs this step (token j >= n_spec[b]
+        is masked to the dead sentinel: no KV write, garbage output).
+
+        Returns (out (B_loc, K), cache): out[b, j] is the model's next
+        token after the prefix ..tokens[b, :j+1] — out[b, 0] is exactly
+        what decode_fn would emit this step, and out[b, j] is valid
+        whenever tokens[b, 1:j+1] were all accepted (each equals the
+        verifier's previous output).  Every token's KV is (re)written at
+        its own position in serving precision — draft-precision KV left by
+        the draft rounds is overwritten — so after committing the accepted
+        prefix the cache is bit-identical to sequential decode's.
+
+        BIT-IDENTITY: the per-token math is `_decode_attn_layer` /
+        `_sample` on the same (B, .) shapes as decode_fn — layers scan
+        outside, the K token positions scan inside (write-before-attend
+        per token, so token j attends the serving-precision KV of tokens
+        < j), and the final norm/logits/sample stage also runs per token —
+        so a committed token is bit-for-bit the token the equivalent
+        sequence of decode_fn calls would produce (same gather key, same
+        per-layer fold_in, same matmul shapes, same sampling fold)."""
+        m, cfg = self.m, self.m.cfg
+        if cfg.arch_type not in CHUNKED_PREFILL_ARCHS:
+            raise NotImplementedError(
+                f"speculative verify supports {CHUNKED_PREFILL_ARCHS}, "
+                f"not {cfg.arch_type!r}")
+        if self.spec.paged and block_tables is None:
+            raise ValueError("paged DecodeSpec: verify_fn needs block_tables")
+        b, kmax = tokens.shape
+        pos = jnp.asarray(pos, jnp.int32)
+        n_spec = jnp.asarray(n_spec, jnp.int32)
+        mlp = "moe" if cfg.is_moe else "dense"
+
+        emb = m.engine.gather("embed", params["embed"], key)
+        # (K, B, d): embed is an elementwise take + psum, so embedding all
+        # K tokens at once is bit-identical to decode_fn's per-token embed
+        xs = jnp.moveaxis(L.embed_vocab_parallel(tokens, emb), 1, 0)
+        # per-token positions with the dead sentinel beyond each slot's
+        # depth: (K, B); attention.slot_valid_mask owns the < 0 test
+        js = jnp.arange(kmax, dtype=jnp.int32)
+        pjs = jnp.where((js[:, None] < n_spec[None, :])
+                        & attn_mod.slot_valid_mask(pos)[None, :],
+                        pos[None, :] + js[:, None], -1)
+
+        grp = m._group(params, "layers")
+        names = list(grp.keys())
+
+        def layer_body(carry, inp):
+            xs, kc_all, vc_all = carry
+            idx, lw = inp
+            lkey = jax.random.fold_in(key, idx)
+            w = self._gather_layer_w("layers", names, lw, lkey, mlp=mlp)
+
+            def token_body(tc, inp2):
+                kc_all, vc_all = tc
+                x, pj = inp2
+                cos, sin = self._decode_rope(pj)
+                x, kc_all, vc_all = self._decode_attn_layer(
+                    x, w, kc_all, vc_all, idx, pj, cos, sin, mlp,
+                    block_tables=block_tables)
+                return (kc_all, vc_all), x
+
+            (kc_all, vc_all), xs = lax.scan(token_body, (kc_all, vc_all),
+                                            (xs, pjs))
+            return (xs, kc_all, vc_all), None
+
+        nl = jax.tree.leaves(grp)[0].shape[0]
+        (xs, k_new, v_new), _ = lax.scan(
+            layer_body, (xs, cache["k"], cache["v"]), (jnp.arange(nl), grp))
+        cache = dict(cache, k=k_new, v=v_new)
+
+        fn = m.engine.gather("final_norm", params["final_norm"], key)
+        head = emb if cfg.tie_embeddings else m.engine.gather(
+            "lm_head", params["lm_head"], key)
+
+        def out_body(_, inp2):
+            x, pj = inp2
+            h = L.rms_norm(x, fn, cfg.norm_eps)
+            logits = L.vocab_parallel_logits(h, head)
+            nxt = self._sample(logits, head.shape[0], sample, pj + 1,
+                               valid=attn_mod.slot_valid_mask(pj))
+            return None, nxt
+
+        _, outs = lax.scan(out_body, None, (xs, pjs))  # (K, B)
+        return jnp.moveaxis(outs, 0, 1).astype(jnp.int32), cache
 
     # ------------------------------------------------------------------
     # Chunked prefill (one prompt chunk per slot, fused into the pool)

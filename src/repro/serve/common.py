@@ -41,13 +41,18 @@ def make_serve_spec(cfg: ModelConfig, ms: MeshSpec, batch: int,
                     rowquant_mlp: bool = False,
                     batch_sharded: Optional[bool] = None,
                     kv_block_size: int = 0,
-                    kv_pool_blocks: int = 0) -> DecodeSpec:
+                    kv_pool_blocks: int = 0,
+                    draft_bits: int = 0,
+                    draft_depth: int = 0) -> DecodeSpec:
     """The DecodeSpec every serve entry point derives from (arch, shape).
 
     kv_block_size > 0 turns on the paged KV pool (block-table addressed;
     requires chunked prefill and an unsharded batch axis — block tables can
     point any lane at any pool row); kv_pool_blocks sizes the pool
-    (0 = one full logical window per slot)."""
+    (0 = one full logical window per slot).  draft_bits + draft_depth > 1
+    turn on self-speculative decoding (a draft_bits rowquant forward drafts
+    up to draft_depth tokens per slot per step, batch-verified by the
+    serving-precision model in one launch)."""
     if batch_sharded is None:
         batch_sharded = batch % ms.fsdp_size == 0 and not kv_block_size
     cache_len = decode_cache_len(cfg, prompt_len, gen, ms.model_size)
@@ -66,6 +71,8 @@ def make_serve_spec(cfg: ModelConfig, ms: MeshSpec, batch: int,
         rowquant_mlp=rowquant_mlp,
         kv_block_size=kv_block_size if cache_len else 0,
         kv_pool_blocks=kv_pool_blocks,
+        draft_bits=draft_bits,
+        draft_depth=draft_depth,
     )
 
 
@@ -94,7 +101,9 @@ def build_serve_setup(arch, *, data_par: int = 1, model_par: int = 1,
                       rowquant_mlp: bool = False,
                       batch_sharded: Optional[bool] = None,
                       kv_block_size: int = 0,
-                      kv_pool_blocks: int = 0) -> ServeSetup:
+                      kv_pool_blocks: int = 0,
+                      draft_bits: int = 0,
+                      draft_depth: int = 0) -> ServeSetup:
     """Build (mesh, model, params, DecodeSpec, ServeEngine) for serving.
     `arch` is a registry name (resolved smoke/full) or a ModelConfig."""
     mesh = jax.make_mesh((data_par, model_par), ("data", "model"))
@@ -110,7 +119,9 @@ def build_serve_setup(arch, *, data_par: int = 1, model_par: int = 1,
                            rowquant_mlp=rowquant_mlp,
                            batch_sharded=batch_sharded,
                            kv_block_size=kv_block_size,
-                           kv_pool_blocks=kv_pool_blocks)
+                           kv_pool_blocks=kv_pool_blocks,
+                           draft_bits=draft_bits,
+                           draft_depth=draft_depth)
     engine = ServeEngine(model, mesh, spec)
     return ServeSetup(cfg=cfg, model=model, params=params, mesh=mesh, ms=ms,
                       spec=spec, engine=engine)

@@ -21,6 +21,7 @@ everything else is decoded once, host-side, to its exact f32 values.
 """
 from __future__ import annotations
 
+import math
 from functools import partial
 from typing import Optional
 
@@ -29,7 +30,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
-from ..core.quant import QuantizedParam, qparam_decode, qparam_split_stack
+from ..core.quant import (QuantConfig, QuantizedParam, qparam_decode,
+                          qparam_encode, qparam_split_stack)
 from ..models.decode import ROWQUANT_MLP, DecodeModel, DecodeSpec, make_decode_spec
 from ..models.transformer import Model
 from .kv_pool import PoolExhausted, decode_block, encode_block
@@ -59,6 +61,57 @@ def prepare_wire_params(model: Model, params: dict) -> dict:
             out[name] = qparam_split_stack(v) if v.stacked else v
         else:
             out[name] = qparam_decode(v)
+    return out
+
+
+# layer weights the self-speculative draft re-quantizes to `draft_bits`
+# (the large matmuls; norms / biases / router / embed / head stay shared
+# with the serving params so the two models agree everywhere quantization
+# wouldn't pay)
+DRAFT_WEIGHTS = ROWQUANT_MLP + ("wq", "wk", "wv", "wo")
+
+
+def _draft_bucket(n_local: int, bits: int) -> int:
+    """Per-leaf draft bucket: the largest power-of-2 divisor of the shard
+    size, capped at 256 — small enough that low-bit min-max buckets track
+    the weight distribution (draft fidelity is what buys acceptance), and a
+    divisor so `qparam_split_stack` stays bucket-aligned."""
+    cpb = 8 // bits if 8 % bits == 0 else 1
+    b = math.gcd(n_local, 256)
+    return b if b % cpb == 0 else 0
+
+
+def make_draft_params(model: Model, params: dict, draft_bits: int) -> dict:
+    """Host-side: the self-speculative DRAFT parameter set — the serving
+    params with every large `layers/*` matmul weight replaced by its
+    `draft_bits`-bit wire codes (deterministic nearest rounding, so the
+    draft — and therefore the acceptance rate — is a pure function of the
+    served weights).  Leaves that already ARE wire codes (quantized
+    checkpoints / train state) are reused as-is: the draft reads the codes
+    already resident for QSDP, no second copy and no re-encode.  Everything
+    else (embed, head, norms, biases, router) is the SAME array object as
+    the serving params — zero extra bytes.
+
+    The draft engine's per-step gather then ships the low-bit codes and
+    consumes them through the bits 2-8 kernels: rowquant matmul where the
+    buckets tile the rows, dense dequant otherwise (see
+    ``DecodeModel._gather_layer_w``)."""
+    if not 2 <= draft_bits <= 8:
+        raise ValueError(f"draft_bits must be in [2, 8], got {draft_bits}")
+    out = {}
+    for name, v in params.items():
+        base = name.rsplit("/", 1)[-1]
+        if (not name.startswith("layers/") or base not in DRAFT_WEIGHTS
+                or isinstance(v, QuantizedParam)):
+            out[name] = v  # shared with (or already wire in) the serving set
+            continue
+        bucket = _draft_bucket(v.shape[-1], draft_bits)
+        if not bucket or v.ndim not in (3, 4):
+            out[name] = v
+            continue
+        cfg = QuantConfig(bits=draft_bits, bucket_size=bucket, mode="nearest")
+        qp = qparam_encode(v, cfg)
+        out[name] = qparam_split_stack(qp) if qp.stacked else qp
     return out
 
 
@@ -142,6 +195,9 @@ class ServeEngine:
         # continuous scheduler right-pads prompt chunks into a bounded
         # bucket set, so this cache holds at most n_buckets entries.
         self._chunk_steps: dict[int, object] = {}
+        # speculative verify: one compiled step per draft depth K actually
+        # launched (bounded by spec.draft_depth distinct values)
+        self._verify_steps: dict[int, object] = {}
         self._block_ops = None
 
     # -- jitted steps ---------------------------------------------------------
@@ -232,6 +288,36 @@ class ServeEngine:
             )
             self._chunk_steps[bucket_len] = jax.jit(fn, donate_argnums=(1,))
         return self._chunk_steps[bucket_len]
+
+    def verify_step(self, k: int):
+        """jit'd speculative verify over the whole slot pool: (params,
+        cache, tokens (B, K), pos (B,), n_spec (B,), key [, sample]) ->
+        (out (B, K), cache) — ``DecodeModel.verify_fn`` scores all K
+        drafted tokens per slot in ONE pooled launch and (re)writes their
+        KV in serving precision.  Paged call shape inserts block_tables
+        (B, blocks_per_slot) after n_spec.  Compiled once per draft depth
+        K."""
+        if k not in self._verify_steps:
+            in_specs = [self._pspecs, self.cache_pspecs, P(self.bax),
+                        P(self.bax), P(self.bax), P()]
+            raw = self.dm.verify_fn
+            if self.spec.paged:
+                in_specs.insert(5, P(None, None))
+
+                def raw(params, cache, tokens, pos, n_spec, bt, key, *extra):
+                    return self.dm.verify_fn(params, cache, tokens, pos,
+                                             n_spec, key, *extra,
+                                             block_tables=bt)
+            if self.spec.sampling:
+                in_specs.append(self.sample_pspecs())
+            fn = shard_map(
+                raw, mesh=self.mesh,
+                in_specs=tuple(in_specs),
+                out_specs=(P(self.bax), self.cache_pspecs),
+                check_vma=False,
+            )
+            self._verify_steps[k] = jax.jit(fn, donate_argnums=(1,))
+        return self._verify_steps[k]
 
     # -- convenience ------------------------------------------------------------
 

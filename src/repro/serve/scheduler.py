@@ -74,8 +74,8 @@ from jax.sharding import PartitionSpec as P
 
 from ..models.decode import CHUNKED_PREFILL_ARCHS, DecodeSpec
 from ..models.transformer import Model
-from .engine import (ServeEngine, make_sample_params, prefill_bucket_for,
-                     prefill_bucket_sizes)
+from .engine import (ServeEngine, make_draft_params, make_sample_params,
+                     prefill_bucket_for, prefill_bucket_sizes)
 from .kv_pool import BlockPool, PoolExhausted, prefix_keys
 
 
@@ -215,6 +215,20 @@ class ContinuousScheduler:
         self.prefill_engine = ServeEngine(model, mesh, self._pf_spec,
                                           params=params)
 
+        # self-speculative decoding (spec.draft_depth > 1): a low-bit draft
+        # engine shares THIS scheduler's cache and reads the wire codes
+        # already resident for QSDP (make_draft_params re-encodes only raw
+        # leaves, once, host-side); the serving-precision engine verifies
+        # every drafted token before it is committed, so streams stay
+        # bit-identical to non-speculative decode
+        self.draft_engine: Optional[ServeEngine] = None
+        self.draft_params: Optional[dict] = None
+        if spec.speculative:
+            self.draft_params = make_draft_params(model, params,
+                                                  spec.draft_bits)
+            self.draft_engine = ServeEngine(model, mesh, spec,
+                                            params=self.draft_params)
+
         # paged pool (spec.paged): block tables map each lane's logical
         # block index -> physical pool block; every valid table entry holds
         # exactly one pool reference (alloc = 1, prefix lookup = +1)
@@ -258,6 +272,16 @@ class ContinuousScheduler:
         self._max_pf_tokens = 0  # longest single prefill launch (seq tokens)
         self.occupancy_sum = 0
         self.tokens_generated = 0
+        # speculative-decoding stats: a "lane step" is one lane's
+        # participation in one pooled launch; accepted_per_launch is
+        # committed tokens per verify lane step (non-speculative decode is
+        # exactly 1 by construction, anything above 1 is bought latency)
+        self.decode_launches = 0
+        self.draft_launches = 0
+        self.draft_lane_steps = 0
+        self.verify_launches = 0
+        self.spec_tokens = 0
+        self.spec_lane_steps = 0
 
     # -- request intake ------------------------------------------------------
 
@@ -403,6 +427,24 @@ class ContinuousScheduler:
                 self.block_tables[slot_i, j] = new
             elif self.pool.is_registered(b):
                 self.pool.unregister(b)
+
+    def _prepare_decode_blocks(self, slot_i: int, k: int) -> None:
+        """Speculative variant of :meth:`_prepare_decode_block`: the lane may
+        write up to `k` positions (p .. p+k-1) this step, so every logical
+        block that span touches needs a physical block up front.  The
+        scheduler only drafts k > 1 under the no-wrap gate (p + k <= window),
+        where all written positions are past the prompt: the lane is the sole
+        owner of every target block, so the COW / unregister branches can
+        never fire — fresh allocation is the only case."""
+        if k <= 1:
+            self._prepare_decode_block(slot_i)
+            return
+        st = self.slots[slot_i]
+        p = int(self.pos[slot_i])
+        bs = self.spec.kv_block_size
+        for j in range(p // bs, (p + k - 1) // bs + 1):
+            if self.block_tables[slot_i, j] < 0:
+                self.block_tables[slot_i, j] = self._lane_alloc(st)
 
     def _bt_device(self) -> jax.Array:
         # -1 (unallocated) entries are safe to ship raw: gathers clip them
@@ -628,10 +670,24 @@ class ContinuousScheduler:
                   if s is not None and not s.prefilling]
         if not active:
             return events
+        # per-slot draft depth this step: capped by the remaining token
+        # budget and the no-wrap gate — a lane whose window would wrap
+        # inside the draft span (pos + k > cache_len) decodes plainly
+        # (k = 1) through the COW-aware single-block path, so speculative
+        # writes are always sole-owner, never rollback/COW
+        n_spec = np.ones(self.B, np.int32)
+        if self.spec.speculative:
+            for i in active:
+                st = self.slots[i]
+                k_i = min(self.spec.draft_depth,
+                          st.req.max_new_tokens - st.n_out,
+                          self.spec.cache_len - int(self.pos[i]))
+                n_spec[i] = max(1, k_i)
+        kmax = max(int(n_spec[i]) for i in active)
         bt = ()
         if self.pool is not None:
             for i in active:
-                self._prepare_decode_block(i)
+                self._prepare_decode_blocks(i, int(n_spec[i]))
             if self.pool.quant_horizon > 0 and self.pool.quant_cfg:
                 # quantized cold tier: idle cached prefix blocks re-encode
                 # into the core.quant wire format, freeing their hot block
@@ -643,15 +699,71 @@ class ContinuousScheduler:
             extra = ({"temp": jnp.asarray(self.temp),
                       "top_k": jnp.asarray(self.top_k),
                       "key": jnp.asarray(self.keys)},)
-        nxt, self.cache = self.engine.decode_step()(
-            self.params, self.cache, jnp.asarray(self.tok),
-            jnp.asarray(self.pos), *bt, self.gather_key, *extra)
-        nxt = np.asarray(jax.device_get(nxt))
+        if kmax == 1:
+            nxt, self.cache = self.engine.decode_step()(
+                self.params, self.cache, jnp.asarray(self.tok),
+                jnp.asarray(self.pos), *bt, self.gather_key, *extra)
+            nxt = np.asarray(jax.device_get(nxt))
+            self.decode_launches += 1
+            self.step_count += 1
+            self.occupancy_sum += len(active)
+            for slot_i in active:
+                self.pos[slot_i] += 1
+                self._emit(events, slot_i, int(nxt[slot_i]))
+            return events
+        return self._step_speculative(events, active, n_spec, kmax, bt, extra)
+
+    def _step_speculative(self, events: list, active: list[int],
+                          n_spec: np.ndarray, kmax: int,
+                          bt: tuple, extra: tuple) -> list[TokenEvent]:
+        """Draft up to kmax-1 tokens per lane on the low-bit engine, then
+        score the whole window in ONE pooled serving-precision launch.
+
+        Round r of the draft feeds the previous round's token at position
+        pos + r (lanes whose depth is exhausted ride along dead, pos -1);
+        the drafts write draft-precision KV into the shared cache, every
+        slot of which the verifier then overwrites with serving-precision
+        KV before any future query can attend to it.  Verification scores
+        [tok, d1, .., d_{k-1}] with the exact per-token decode math (same
+        weights, same fold_in-keyed sampling streams), commits the longest
+        prefix of drafts the serving model agrees with plus the one token
+        it produces itself — so every committed token, greedy or sampled,
+        is bit-identical to non-speculative decode by construction."""
+        rows = [jnp.asarray(self.tok)]
+        cur = rows[0]
+        dstep = self.draft_engine.decode_step()
+        for r in range(kmax - 1):
+            live = (self.pos >= 0) & (n_spec - 1 > r)
+            pos_r = np.where(live, self.pos + r, -1).astype(np.int32)
+            cur, self.cache = dstep(
+                self.draft_params, self.cache, cur, jnp.asarray(pos_r),
+                *bt, self.gather_key, *extra)
+            rows.append(cur)
+            self.draft_launches += 1
+            self.draft_lane_steps += int(live.sum())
+        tok_mat = jnp.stack(rows, axis=1)  # (B, kmax) drafted window
+        outs, self.cache = self.engine.verify_step(kmax)(
+            self.params, self.cache, tok_mat, jnp.asarray(self.pos),
+            jnp.asarray(n_spec), *bt, self.gather_key, *extra)
+        self.verify_launches += 1
+        self.spec_lane_steps += len(active)
+        tok_host, out_host = jax.device_get((tok_mat, outs))
+        tok_host = np.asarray(tok_host)
+        out_host = np.asarray(out_host)
         self.step_count += 1
         self.occupancy_sum += len(active)
-        for slot_i in active:
-            self.pos[slot_i] += 1
-            self._emit(events, slot_i, int(nxt[slot_i]))
+        for i in active:
+            k_i = int(n_spec[i])
+            a = 0  # accepted drafts: longest prefix the verifier agrees on
+            while (a < k_i - 1
+                   and int(out_host[i, a]) == int(tok_host[i, a + 1])):
+                a += 1
+            for j in range(a + 1):
+                self.pos[i] += 1
+                self.spec_tokens += 1
+                self._emit(events, i, int(out_host[i, j]))
+                if self.slots[i] is None:
+                    break  # EOS / budget retirement mid-window
         return events
 
     def run(self, max_steps: Optional[int] = None,
@@ -688,4 +800,28 @@ class ContinuousScheduler:
             "slots": self.B,
             "mean_occupancy": (self.occupancy_sum / self.step_count
                                if self.step_count else 0.0),
+            # serving-precision launch accounting, normalized per lane so
+            # the numbers are batch-composition independent:
+            # launches_per_token = serving-precision lane-steps per decoded
+            # token — exactly 1.0 for non-speculative decode (every active
+            # lane in every pooled launch emits one token), < 1.0 iff
+            # speculation commits more than one token per verify
+            "decode_launches": self.decode_launches,
+            "draft_launches": self.draft_launches,
+            "draft_lane_steps": self.draft_lane_steps,
+            "verify_launches": self.verify_launches,
+            "spec_tokens": self.spec_tokens,
+            "spec_lane_steps": self.spec_lane_steps,
+            "lane_steps": self.occupancy_sum,
+            "accepted_per_launch": (self.spec_tokens / self.spec_lane_steps
+                                    if self.spec_lane_steps else 0.0),
+            "launches_per_token": (
+                self.occupancy_sum
+                / max(1, self.tokens_generated - self.prefill_count)),
+            # draft cost per committed token (low-bit lane-steps; the
+            # speculative win is real when accepted_per_launch beats
+            # 1 + draft_overhead * cost_ratio of the draft forward)
+            "draft_overhead": (
+                self.draft_lane_steps
+                / max(1, self.tokens_generated - self.prefill_count)),
         }

@@ -1,0 +1,317 @@
+"""Self-speculative decoding suite: the low-bit wire codes draft, the
+serving-precision model verifies.
+
+Load-bearing invariants:
+
+* Committed tokens are BIT-IDENTICAL to non-speculative decode — greedy
+  streams match the solo batch-of-1 reference
+  (``ServeEngine.generate(..., fold_step_keys=False)``) and sampled
+  streams match the non-speculative scheduler, on the ring AND paged KV
+  paths.  Speculation is a pure launch-count optimization; it may never
+  change a token.
+* The 2/3/4-bit rowquant re-quantization of the serving weights agrees
+  with the serving-precision greedy argmax often enough to be a useful
+  draft: acceptance per verify launch stays above a fixed per-bit-width
+  threshold on the toy model (teacher-forced by construction — every
+  rejected draft token is replaced by the verifier's own output).
+* Acceptance is DETERMINISTIC: identical across runs, and each request's
+  committed stream (and launch count) is independent of what else shares
+  the batch — per-slot draft depth depends only on that slot's own budget
+  and position.
+
+Property tests run with real ``hypothesis`` when installed or the seeded
+sweep stub in tests/_hypothesis_stub.py (conftest.py installs it).
+Schedulers/engines are cached at module scope; compiles dominate, and a
+dirty slot pool is exactly what the hygiene invariants elsewhere cover.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.core.qsdp import MeshSpec, QSDPConfig
+from repro.core.quant import QuantizedParam
+from repro.models.config import ModelConfig
+from repro.models.decode import DecodeSpec
+from repro.models.transformer import Model
+from repro.serve import ContinuousScheduler, Request, ServeEngine
+from repro.serve.engine import make_draft_params, make_sample_params
+
+MS = MeshSpec(axes=("data", "model"), shape=(1, 1))
+MESH = jax.make_mesh((1, 1), ("data", "model"))
+GATHER_KEY = jax.random.PRNGKey(7)
+RING = 32
+VOCAB = 256
+CFG = ModelConfig(name="spec-toy", arch_type="dense", n_layers=2, d_model=64,
+                  vocab_size=VOCAB, n_heads=4, n_kv_heads=2, head_dim=16,
+                  d_ff=128)
+
+# acceptance-per-verify-launch floors on the toy model (1.0 = the verifier
+# alone; anything above it means the draft's argmax agreed at least
+# sometimes).  Coarser drafts agree less — on these RANDOM weights the
+# near-uniform logits flip under 2-bit noise often enough that some
+# compositions accept nothing, so 2-bit gets a fixed composition (below)
+# instead of a sweep floor.
+ACCEPT_FLOOR = {2: 1.05, 3: 1.1, 4: 1.5}
+
+_state: dict = {}
+
+
+def model_and_params():
+    if "model" not in _state:
+        m = Model(CFG, MS, QSDPConfig(min_quant_size=256))
+        _state["model"] = (m, m.init_params(jax.random.PRNGKey(0)))
+    return _state["model"]
+
+
+def _spec(slots, *, paged=False, bits=0, depth=0):
+    return DecodeSpec(cache_len=RING, batch_global=slots,
+                      batch_sharded=False, sampling=True,
+                      kv_block_size=8 if paged else 0,
+                      draft_bits=bits, draft_depth=depth)
+
+
+def scheduler(bits, depth, *, paged=False, slots=4) -> ContinuousScheduler:
+    key = ("sched", bits, depth, paged, slots)
+    if key not in _state:
+        m, params = model_and_params()
+        kw = dict(prefill_chunk=8, prefill_buckets=3) if paged else {}
+        _state[key] = ContinuousScheduler(
+            m, MESH, _spec(slots, paged=paged, bits=bits, depth=depth),
+            params, gather_key=GATHER_KEY, **kw)
+    return _state[key]
+
+
+def solo_tokens(prompt, gen, *, paged=False, temperature=0.0, top_k=0,
+                seed=0):
+    """NON-speculative solo batch-of-1 reference with the fixed gather
+    key — the stream speculation must reproduce bit-for-bit."""
+    key = ("solo", paged)
+    if key not in _state:
+        m, params = model_and_params()
+        _state[key] = (ServeEngine(m, MESH, _spec(1, paged=paged)), params)
+    eng, params = _state[key]
+    kw = dict(prefill_chunk=8, prefill_buckets=3) if paged else {}
+    out = eng.generate(
+        params, {"tokens": jnp.asarray(np.asarray(prompt, np.int32)[None])},
+        {"tokens": P(None)}, n_tokens=gen, key=GATHER_KEY,
+        sample=make_sample_params(temperature, top_k, seed),
+        fold_step_keys=False, **kw)
+    return np.asarray(jax.device_get(out))[0]
+
+
+_RID = itertools.count()
+
+
+def make_requests(rng, n, tag, max_gen=6, sampled=False):
+    reqs = []
+    for i in range(n):
+        t, k = 0.0, 0
+        if sampled and i % 2:
+            t, k = float(rng.uniform(0.5, 1.2)), int(rng.integers(0, 6))
+        reqs.append(Request(
+            rid=f"{tag}{i}.{next(_RID)}",
+            prompt=rng.integers(0, VOCAB,
+                                size=int(rng.integers(3, 10))).tolist(),
+            max_new_tokens=int(rng.integers(1, max_gen + 1)),
+            temperature=t, top_k=k, seed=1000 + i))
+    return reqs
+
+
+def run_sched(sched, reqs):
+    base = sched.stats()
+    for r in reqs:
+        sched.submit(Request(rid=r.rid, prompt=r.prompt,
+                             max_new_tokens=r.max_new_tokens,
+                             temperature=r.temperature, top_k=r.top_k,
+                             seed=r.seed))
+    done = sched.run(max_steps=2000)
+    st = sched.stats()
+    delta = {k: st[k] - base[k]
+             for k in ("spec_tokens", "spec_lane_steps", "draft_launches",
+                       "verify_launches", "decode_launches",
+                       "tokens_generated")}
+    return done, delta
+
+
+# ---------------------------------------------------------------------------
+# draft parameter construction
+# ---------------------------------------------------------------------------
+
+
+def test_make_draft_params_quantizes_layer_matmuls_shares_rest():
+    m, params = model_and_params()
+    draft = make_draft_params(m, params, 4)
+    assert set(draft) == set(params)
+    quantized = [n for n, v in draft.items()
+                 if isinstance(v, QuantizedParam)
+                 and not isinstance(params[n], QuantizedParam)]
+    assert quantized, "no layer weight was re-quantized for the draft"
+    for n in quantized:
+        assert n.startswith("layers/"), n
+        assert draft[n].cfg.bits == 4
+        assert draft[n].cfg.mode == "nearest"  # deterministic draft
+    # everything else is the SAME array object — zero extra bytes
+    for n, v in draft.items():
+        if n not in quantized:
+            assert v is params[n], n
+
+
+@pytest.mark.parametrize("bits", [1, 9])
+def test_make_draft_params_rejects_bad_bits(bits):
+    m, params = model_and_params()
+    with pytest.raises(ValueError):
+        make_draft_params(m, params, bits)
+
+
+def test_decode_spec_speculative_property():
+    assert _spec(4, bits=4, depth=4).speculative
+    assert not _spec(4).speculative
+    assert not _spec(4, bits=4, depth=1).speculative  # depth 1 = plain
+    assert not _spec(4, bits=0, depth=4).speculative
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: speculative == non-speculative, ring and paged
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits,depth", [(4, 4), (2, 3)])
+def test_greedy_speculative_matches_solo_ring(bits, depth):
+    rng = np.random.default_rng(10 * bits + depth)
+    reqs = make_requests(rng, 5, f"g{bits}")
+    done, _ = run_sched(scheduler(bits, depth), reqs)
+    for r in reqs:
+        ref = solo_tokens(r.prompt, r.max_new_tokens)
+        assert np.array_equal(done[r.rid].tokens, ref), \
+            (r.rid, done[r.rid].tokens.tolist(), ref.tolist())
+
+
+def test_greedy_speculative_matches_solo_paged():
+    rng = np.random.default_rng(3)
+    reqs = make_requests(rng, 5, "p")
+    done, delta = run_sched(scheduler(4, 4, paged=True), reqs)
+    for r in reqs:
+        ref = solo_tokens(r.prompt, r.max_new_tokens, paged=True)
+        assert np.array_equal(done[r.rid].tokens, ref), \
+            (r.rid, done[r.rid].tokens.tolist(), ref.tolist())
+    assert delta["verify_launches"] > 0  # speculation actually engaged
+
+
+def test_sampled_speculative_matches_plain_scheduler():
+    """Sampled streams too: committed tokens always come from the verifier
+    and the draft shares the per-slot sampling streams, so the speculative
+    scheduler reproduces the non-speculative one bit-for-bit."""
+    rng = np.random.default_rng(4)
+    reqs = make_requests(rng, 6, "s", sampled=True)
+    done_spec, delta = run_sched(scheduler(4, 4), reqs)
+    done_plain, _ = run_sched(scheduler(0, 0), reqs)
+    for r in reqs:
+        assert np.array_equal(done_spec[r.rid].tokens,
+                              done_plain[r.rid].tokens), r.rid
+    assert delta["spec_tokens"] > 0
+
+
+# ---------------------------------------------------------------------------
+# draft quality: acceptance above a fixed per-bit-width floor
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(bits=st.sampled_from([3, 4]), seed=st.integers(0, 3))
+def test_draft_acceptance_above_floor(bits, seed):
+    """The low-bit draft agrees with the serving-precision greedy argmax
+    at a useful rate: tokens committed per verify launch stay above the
+    per-bit floor (1.0 would mean the draft never helped), while the
+    committed stream stays bit-identical to the solo reference."""
+    rng = np.random.default_rng(100 + seed)
+    reqs = make_requests(rng, 4, f"a{bits}_{seed}", max_gen=8)
+    done, delta = run_sched(scheduler(bits, 4), reqs)
+    for r in reqs:
+        ref = solo_tokens(r.prompt, r.max_new_tokens)
+        assert np.array_equal(done[r.rid].tokens, ref), r.rid
+    assert delta["spec_lane_steps"] > 0
+    rate = delta["spec_tokens"] / delta["spec_lane_steps"]
+    assert rate >= ACCEPT_FLOOR[bits], (bits, rate)
+
+
+def test_draft_acceptance_2bit_fixed_composition():
+    """Even the 2-bit draft clears its floor on a fixed composition (and
+    acceptance there is deterministic, so this is a stable threshold, not
+    a flaky sample)."""
+    rng = np.random.default_rng(100)
+    reqs = make_requests(rng, 4, "a2fix", max_gen=8)
+    done, delta = run_sched(scheduler(2, 4), reqs)
+    for r in reqs:
+        assert np.array_equal(done[r.rid].tokens,
+                              solo_tokens(r.prompt, r.max_new_tokens)), r.rid
+    rate = delta["spec_tokens"] / max(delta["spec_lane_steps"], 1)
+    assert rate >= ACCEPT_FLOOR[2], rate
+
+
+# ---------------------------------------------------------------------------
+# determinism: across runs and batch compositions
+# ---------------------------------------------------------------------------
+
+
+def test_acceptance_deterministic_across_runs():
+    rng = np.random.default_rng(5)
+    reqs = make_requests(rng, 5, "d", sampled=True)
+    s1 = ContinuousScheduler(*_fresh_args(), gather_key=GATHER_KEY)
+    s2 = ContinuousScheduler(*_fresh_args(), gather_key=GATHER_KEY)
+    done1, delta1 = run_sched(s1, reqs)
+    done2, delta2 = run_sched(s2, reqs)
+    for r in reqs:
+        assert np.array_equal(done1[r.rid].tokens, done2[r.rid].tokens), r.rid
+    assert delta1 == delta2, (delta1, delta2)  # identical launch accounting
+
+
+def _fresh_args():
+    m, params = model_and_params()
+    return m, MESH, _spec(4, bits=4, depth=4), params
+
+
+def test_acceptance_independent_of_batch_composition():
+    """Each request's committed stream is a function of the request alone:
+    per-slot draft depth depends only on that slot's own budget/position,
+    dead lanes never enter live lanes' reductions.  Resubmitting the same
+    requests in a different arrival order, mixed with fillers (including a
+    gen-1 request that forces a k=1 lane inside deeper launches), must
+    reproduce every stream."""
+    rng = np.random.default_rng(6)
+    base = make_requests(rng, 3, "b", sampled=True)
+    fillers = make_requests(rng, 3, "f", sampled=True)
+    fillers[0] = Request(rid=fillers[0].rid, prompt=fillers[0].prompt,
+                         max_new_tokens=1, seed=fillers[0].seed)
+    # same requests under fresh rids — a stream is a function of the
+    # request's content and seed, never its id or arrival order
+    redo = {r.rid: Request(rid=f"{r.rid}.redo", prompt=r.prompt,
+                           max_new_tokens=r.max_new_tokens,
+                           temperature=r.temperature, top_k=r.top_k,
+                           seed=r.seed)
+            for r in base}
+    done_a, _ = run_sched(scheduler(4, 4), base)
+    done_b, _ = run_sched(scheduler(4, 4),
+                          [fillers[0], redo[base[2].rid], fillers[1],
+                           redo[base[0].rid], fillers[2], redo[base[1].rid]])
+    for r in base:
+        assert np.array_equal(done_a[r.rid].tokens,
+                              done_b[f"{r.rid}.redo"].tokens), \
+            (r.rid, done_a[r.rid].tokens.tolist(),
+             done_b[f"{r.rid}.redo"].tokens.tolist())
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+
+def test_speculative_spec_validation():
+    m, _ = model_and_params()
+    with pytest.raises(ValueError):
+        ServeEngine(m, MESH, _spec(2, bits=1, depth=4))  # bits out of range
