@@ -8,6 +8,11 @@ matters here, the absolute ms are CPU numbers):
   qsdp                     W8G8, per-tensor launches (3 per quantized tensor)
   qsdp-coalesced           W8G8, ONE u8 launch per layer gather / RS
   qsdp-coalesced-prefetch  + double-buffered layer prefetch pipeline
+  qsdp-autoplan            W8G8 under the repro.tune cost-model policy:
+                           coalesce only layers whose gathered wire buffer
+                           stays under coalesce_max_bytes — on this mesh
+                           that falls back to per-tensor everywhere (the
+                           coalesced small-scale regression fix)
 
 For each variant this measures
   * per-step wall ms (median over --steps timed steps after a warmup),
@@ -43,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.qsdp import MeshSpec, QSDPConfig, layer_gather_launches, step_comm_bytes
+from repro.tune.cost_model import CPU_SMOKE, plan_layer_policies
 from repro.data import SyntheticLM
 from repro.models.config import ModelConfig
 from repro.models.transformer import Model
@@ -53,12 +59,37 @@ from repro.train.step import (init_train_state, make_jitted_train_step,
                               quantize_train_state)
 
 
-def variants(quantized_state=False):
+def _round_floats(obj, ndigits=4):
+    """Round every float in the output tree (stable artifact diffs)."""
+    if isinstance(obj, float):
+        return round(obj, ndigits)
+    if isinstance(obj, dict):
+        return {k: _round_floats(v, ndigits) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_round_floats(v, ndigits) for v in obj]
+    return obj
+
+
+def autoplan_config(mcfg, ms) -> tuple[QSDPConfig, int]:
+    """The deployment-plan policy for this bench's mesh: per-layer coalesce
+    decisions from the repro.tune cost model (cpu-smoke preset), expressed
+    as the coalesce_max_bytes threshold.  On the tiny CPU mesh every layer
+    buffer exceeds the crossover, so the policy falls back to per-tensor
+    gathers — the coalesced small-scale regression fix, bit-exact by
+    construction (both paths draw identical per-tensor quantization keys)."""
+    probe = Model(mcfg, ms,
+                  QSDPConfig(coalesce=True, min_quant_size=256)).engine
+    _, thresh = plan_layer_policies(probe, CPU_SMOKE)
+    return QSDPConfig(coalesce=True, coalesce_max_bytes=thresh), thresh
+
+
+def variants(mcfg, ms, quantized_state=False):
     v = {
         "baseline-fsdp": QSDPConfig.baseline(),
         "qsdp": QSDPConfig(coalesce=False),
         "qsdp-coalesced": QSDPConfig(coalesce=True),
         "qsdp-coalesced-prefetch": QSDPConfig(coalesce=True, prefetch=True),
+        "qsdp-autoplan": autoplan_config(mcfg, ms)[0],
     }
     if quantized_state:
         # train state rests as packed wire codes: QuantizedParam masters
@@ -114,9 +145,9 @@ def bench_variant(name, qcfg, mcfg, mesh, ms, batch, n_micro, steps):
     mem = state_and_ckpt_bytes(state, len(mesh.devices.flat))
     return {
         **mem,
-        "compile_s": round(compile_s, 1),
+        "compile_s": float(compile_s),
         "step_ms_median": float(np.median(times)),
-        "step_ms_all": [round(t, 2) for t in times],
+        "step_ms_all": [float(t) for t in times],
         "loss_final": float(metrics["loss"]),
         "layer_gather_launches_analytic": layer_gather_launches(
             model.engine, layer_names),
@@ -157,9 +188,11 @@ def main(argv=None):
     batch = {"tokens": tokens, "labels": labels}
 
     out = {"config": {**dims, "mesh": "4x2", "steps": steps,
-                      "smoke": bool(args.smoke)},
+                      "smoke": bool(args.smoke),
+                      "autoplan_coalesce_max_bytes":
+                          autoplan_config(mcfg, ms)[1]},
            "variants": {}}
-    for name, qcfg in variants(args.quantized_state).items():
+    for name, qcfg in variants(mcfg, ms, args.quantized_state).items():
         r = bench_variant(name, qcfg, mcfg, mesh, ms, batch, dims["micro"], steps)
         out["variants"][name] = r
         c = r["hlo_collective_launches"]
@@ -173,13 +206,22 @@ def main(argv=None):
 
     base = out["variants"]["qsdp"]
     co = out["variants"]["qsdp-coalesced"]
+    ap_row = out["variants"]["qsdp-autoplan"]
     out["summary"] = {
         "ag_launch_reduction": (base["hlo_collective_launches"]["all-gather"]
                                 / max(co["hlo_collective_launches"]["all-gather"], 1)),
         "wire_bytes_ratio_co_vs_per_tensor": (
             co["wire_bytes_analytic_per_step"]["total"]
             / base["wire_bytes_analytic_per_step"]["total"]),
+        "autoplan_vs_qsdp_step_ratio": (ap_row["step_ms_median"]
+                                        / base["step_ms_median"]),
+        "autoplan_vs_coalesced_step_ratio": (ap_row["step_ms_median"]
+                                             / co["step_ms_median"]),
     }
+    print(f"autoplan: {out['summary']['autoplan_vs_qsdp_step_ratio']:.3f}x "
+          f"plain qsdp, {out['summary']['autoplan_vs_coalesced_step_ratio']:.3f}x "
+          f"always-coalesced (threshold "
+          f"{out['config']['autoplan_coalesce_max_bytes']} B)")
     if "qsdp-quantized-state" in out["variants"]:
         qs = out["variants"]["qsdp-quantized-state"]
         out["summary"]["state_bytes_ratio_qstate_vs_f32"] = (
@@ -194,7 +236,7 @@ def main(argv=None):
           f"the wire bytes")
 
     with open(args.out, "w") as f:
-        json.dump(out, f, indent=1)
+        json.dump(_round_floats(out), f, indent=1)
     print(f"wrote {args.out}")
     return 0
 

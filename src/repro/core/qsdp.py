@@ -272,6 +272,19 @@ class QSDPConfig:
     # reduce-scatter is ONE collective launch instead of 3 x n_params.
     # Bit-exact vs. the per-tensor collectives (same keys, same wire bytes).
     coalesce: bool = True
+    # Per-layer byte threshold on the coalesced path (None = coalesce every
+    # layer when coalesce=True).  Coalescing trades 3*n_params-1 launch
+    # overheads for extra serialization passes over ONE gathered buffer of
+    # P * layout.nbytes bytes (segment concat, f32<->u8 bitcasts, vmap'd
+    # per-shard decode) — a win only while that buffer is small relative to
+    # the launch overhead it saves.  On the tiny smoke CPU mesh the
+    # serialization side dominates (qsdp-coalesced 370 ms vs plain qsdp
+    # 204 ms median), so the deployment-plan autotuner (repro.tune) sets
+    # this threshold from its cost model: layers whose per-device gathered
+    # wire buffer exceeds it fall back to per-tensor gathers.  Because the
+    # two paths are bit-identical (same per-tensor quantization keys), the
+    # policy can flip per layer without changing a single gradient bit.
+    coalesce_max_bytes: Optional[int] = None
     # §Perf knob: double-buffered layer prefetch — the scan-over-layers
     # issues the coalesced gather for layer i+1 while layer i computes,
     # carrying the u8 wire buffer through the scan carry (forward AND the
@@ -578,6 +591,25 @@ class QSDPEngine:
             and spec.n_logical_local(self.ms.model_size) >= self.cfg.min_quant_size
         )
 
+    def layer_wire_bytes(self, names: tuple[str, ...]) -> int:
+        """Per-device bytes of the GATHERED coalesced wire buffer for one
+        gather of `names` (= fsdp_size * encoded layout bytes) — the
+        quantity the coalesce threshold compares against, and what the
+        serialization term of the tune cost model scales with."""
+        st = self._layer_static(tuple(names))
+        return self.ms.fsdp_size * st.gather_layout().nbytes
+
+    def layer_coalesced(self, names: tuple[str, ...]) -> bool:
+        """Per-layer coalesce policy: ship these params as ONE wire buffer
+        iff ``cfg.coalesce`` and the gathered buffer stays under
+        ``cfg.coalesce_max_bytes`` (None = no threshold).  Purely static —
+        decided from ParamSpecs at trace time, never from array values."""
+        if not self.cfg.coalesce:
+            return False
+        if self.cfg.coalesce_max_bytes is None:
+            return True
+        return self.layer_wire_bytes(names) <= self.cfg.coalesce_max_bytes
+
     def _layer_static(self, names: tuple[str, ...]) -> _LayerStatic:
         specs = [self.specs[n] for n in names]
         return _LayerStatic(
@@ -623,28 +655,40 @@ class QSDPEngine:
         w = full[:n].reshape(spec.tp_local_shape(self.ms.model_size))
         return w.astype(self.compute_dtype)
 
+    def _gather_per_tensor(self, name: str, flat: jax.Array,
+                           key: jax.Array) -> jax.Array:
+        """Forced per-tensor gather: 3 collectives (codes/scale/zero) for a
+        quantized param, 1 for an fp payload — never re-coalesced."""
+        spec = self.specs[name]
+        key = jax.random.fold_in(key, _stable_hash(name))
+        full = qsdp_gather(flat, key, self._static_for(spec))
+        return self._reshape_full(name, full)
+
     def gather(self, name: str, local: jax.Array, key: jax.Array) -> jax.Array:
         """Materialize the TP-local tensor for parameter `name` from its
         per-device flat shard (shape (..., 1, 1, n_local) or (n_local,)).
         Under ``cfg.coalesce`` the tensor's codes + metadata ride one
         collective (single-segment wire buffer) instead of three."""
         flat = local.reshape(-1)
-        if self.cfg.coalesce:
+        if self.layer_coalesced((name,)):
             full = qsdp_gather_layer((flat,), key, self._layer_static((name,)))[0]
             return self._reshape_full(name, full)
-        spec = self.specs[name]
-        key = jax.random.fold_in(key, _stable_hash(name))
-        full = qsdp_gather(flat, key, self._static_for(spec))
-        return self._reshape_full(name, full)
+        return self._gather_per_tensor(name, flat, key)
 
     def gather_layer(self, prefix: str, leaves: dict[str, jax.Array],
                      key: jax.Array) -> dict[str, jax.Array]:
         """Gather every parameter of one layer-dict — ONE collective for the
-        whole layer under ``cfg.coalesce``, per-param otherwise."""
+        whole layer under ``cfg.coalesce``, per-param otherwise.  The
+        fallback is genuinely per-tensor (3 launches per quantized param):
+        re-checking the byte threshold tensor-by-tensor would single-segment
+        re-coalesce every small tensor, which the cost model prices as a
+        loss (it saves 2 launches but adds the wire serialize/decode passes
+        that caused the small-scale regression in the first place)."""
         if not leaves:
             return {}
-        if not self.cfg.coalesce:
-            return {k: self.gather(f"{prefix}{k}", v, key) for k, v in leaves.items()}
+        if not self.layer_coalesced(tuple(f"{prefix}{k}" for k in sorted(leaves))):
+            return {k: self._gather_per_tensor(f"{prefix}{k}", v.reshape(-1), key)
+                    for k, v in leaves.items()}
         names, st, shards = self._layer_args(prefix, leaves)
         fulls = qsdp_gather_layer(shards, key, st)
         return {k: self._reshape_full(f"{prefix}{k}", f)
@@ -847,9 +891,10 @@ def layer_gather_launches(engine: QSDPEngine, names: list[str]) -> int:
     (the quantity the coalesced wire format collapses): 3 per quantized
     tensor (codes, scale, zero) + 1 per full-precision tensor when
     per-tensor, 1 total when coalesced.  Hierarchical (two-level) gathers
-    double the quantized / coalesced launches (pod + in-pod)."""
+    double the quantized / coalesced launches (pod + in-pod).  Respects the
+    per-layer ``coalesce_max_bytes`` policy (engine.layer_coalesced)."""
     levels = 2 if engine.cfg.hierarchical and engine.ms.multi_pod else 1
-    if engine.cfg.coalesce:
+    if engine.layer_coalesced(tuple(names)):
         return levels
     return sum(3 * levels if engine._is_quantized(engine.specs[n]) else 1
                for n in names)

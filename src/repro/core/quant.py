@@ -88,9 +88,12 @@ class QuantConfig:
     """Static configuration of the wire quantizer.
 
     bits:        code width (2..8).  Widths with 8 % bits == 0 are bit-packed
-                 into uint8 so the on-wire byte count is exact; 3/5/6-bit
-                 codes occupy one byte each on the (emulated) wire and the
-                 analytic communication model accounts the ideal ``bits/8``.
+                 into uint8 so the on-wire byte count is exact; 3/5/6/7-bit
+                 codes occupy one byte each on the (emulated) wire, and the
+                 analytic communication model (wire_segment_bytes,
+                 gather_wire_bytes, ...) accounts that same one byte per
+                 code, so analytic bytes == actual wire-buffer bytes for
+                 every width (pinned by tests/test_wire_accounting.py).
     bucket_size: independent scaling granularity (paper default 1024).
     mode:        rounding rule — "shift" (Def. 1, weights), "stochastic"
                  (Def. 12, gradients) or "nearest" (ablation).

@@ -27,8 +27,12 @@ from ..serve import (Request, build_serve_setup, make_prompt_batch,
                      make_scheduler)
 
 
-def parse_args(argv=None):
+def _build_parser():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--plan", type=str, default=None,
+                    help="DeploymentPlan JSON from repro.tune.autotune — "
+                         "supplies the QSDP comm policy and the serve-knob "
+                         "defaults (explicit flags still override knobs)")
     ap.add_argument("--arch", default="gpt-125m")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=8,
@@ -86,7 +90,75 @@ def parse_args(argv=None):
                     help="--continuous: draft up to this many tokens per "
                          "slot per step, batch-verified in one "
                          "serving-precision launch (<= 1 = off)")
-    return ap.parse_args(argv)
+    return ap
+
+
+# plan serve-section field -> launcher flag dest
+_PLAN_SERVE_DESTS = {
+    "slots": "batch", "prefill_chunk": "prefill_chunk",
+    "prefill_buckets": "prefill_buckets",
+    "prefill_interleave": "prefill_interleave",
+    "kv_block_size": "kv_block_size", "kv_pool_blocks": "kv_pool_blocks",
+    "kv_quant_bits": "kv_quant_bits", "kv_quant_horizon": "kv_quant_horizon",
+    "draft_bits": "draft_bits", "draft_depth": "draft_depth",
+}
+
+
+def validate_args(ap, args) -> None:
+    """Reject inconsistent flag combos at parse time — failing here with a
+    one-line reason beats failing deep inside tracing."""
+    if not 2 <= args.wbits <= 8:
+        ap.error(f"--wbits must be in 2..8 (got {args.wbits})")
+    if args.draft_bits and not 2 <= args.draft_bits <= 8:
+        ap.error(f"--draft-bits must be 0 (off) or in 2..8 (got "
+                 f"{args.draft_bits}) — the draft re-quantizes the serving "
+                 f"weights through the 2-8 bit wire kernels")
+    if args.kv_quant_bits and not 2 <= args.kv_quant_bits <= 8:
+        ap.error(f"--kv-quant-bits must be 0 (off) or in 2..8 "
+                 f"(got {args.kv_quant_bits})")
+    if args.prefill_buckets < 1:
+        ap.error(f"--prefill-buckets must be >= 1 (got "
+                 f"{args.prefill_buckets})")
+    if min(args.prefill_chunk, args.kv_block_size, args.kv_pool_blocks,
+           args.prefill_interleave - 1) < 0:
+        ap.error("--prefill-chunk/--kv-block-size/--kv-pool-blocks must be "
+                 ">= 0 and --prefill-interleave >= 1")
+    if args.kv_block_size and not args.prefill_chunk:
+        ap.error("--kv-block-size requires --prefill-chunk (paged serving "
+                 "admits through chunked prefill)")
+    if args.kv_quant_bits and not args.kv_block_size:
+        ap.error("--kv-quant-bits requires --kv-block-size (the cold tier "
+                 "demotes paged pool blocks)")
+    if (args.draft_bits > 0) != (args.draft_depth > 1):
+        ap.error("speculative decode needs BOTH --draft-bits >= 2 and "
+                 "--draft-depth >= 2")
+    if args.draft_depth > 1 and not args.continuous:
+        ap.error("--draft-depth requires --continuous (speculation lives in "
+                 "the scheduler's draft/verify phases)")
+    if args.plan and args.baseline:
+        ap.error("--plan pins the QSDP comm policy; don't combine it with "
+                 "--baseline")
+
+
+def parse_args(argv=None):
+    ap = _build_parser()
+    args = ap.parse_args(argv)
+    args.plan_obj = None
+    if args.plan:
+        from ..tune.plan import DeploymentPlan
+        try:
+            plan = DeploymentPlan.load(args.plan)
+        except (OSError, ValueError) as e:
+            ap.error(f"--plan {args.plan}: {e}")
+        # the plan's serve section provides the DEFAULTS; flags the user
+        # typed still win (argparse re-parse with updated defaults)
+        knobs = plan.serve_knobs()
+        ap.set_defaults(**{_PLAN_SERVE_DESTS[k]: v for k, v in knobs.items()
+                           if k in _PLAN_SERVE_DESTS})
+        args = ap.parse_args(argv)
+        args.plan_obj = plan
+    validate_args(ap, args)
+    return args
 
 
 def run_continuous(setup, args) -> int:
@@ -167,17 +239,17 @@ def run_batch(setup, args) -> int:
 
 def main(argv=None):
     args = parse_args(argv)
-    qsdp = (QSDPConfig.baseline() if args.baseline
-            else QSDPConfig(weight_bits=args.wbits))
-    if args.kv_block_size and not args.prefill_chunk:
-        raise SystemExit("--kv-block-size requires --prefill-chunk (paged "
-                         "serving admits through chunked prefill)")
-    if (args.draft_bits > 0) != (args.draft_depth > 1):
-        raise SystemExit("speculative decode needs BOTH --draft-bits >= 2 "
-                         "and --draft-depth >= 2")
-    if args.draft_depth > 1 and not args.continuous:
-        raise SystemExit("--draft-depth requires --continuous (speculation "
-                         "lives in the scheduler's draft/verify phases)")
+    if args.plan_obj is not None:
+        try:
+            args.plan_obj.validate_mesh(("data", "model"),
+                                        (args.data_par, args.model_par))
+            qsdp = args.plan_obj.to_qsdp_config(QSDPConfig())
+        except ValueError as e:
+            raise SystemExit(f"--plan {args.plan}: {e}")
+    elif args.baseline:
+        qsdp = QSDPConfig.baseline()
+    else:
+        qsdp = QSDPConfig(weight_bits=args.wbits)
     setup = build_serve_setup(
         args.arch, data_par=args.data_par, model_par=args.model_par,
         smoke=args.smoke, qsdp=qsdp, batch=args.batch,

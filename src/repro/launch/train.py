@@ -32,16 +32,58 @@ from ..train.step import (
 
 
 def build_qsdp(args) -> QSDPConfig:
+    if args.plan:
+        from ..tune.plan import DeploymentPlan
+        try:
+            plan = DeploymentPlan.load(args.plan)
+            plan.validate_mesh(("data", "model"),
+                               (args.data_par, args.model_par))
+            return plan.to_qsdp_config(QSDPConfig())
+        except (OSError, ValueError) as e:
+            raise SystemExit(f"--plan {args.plan}: {e}")
     if args.baseline:
         return QSDPConfig.baseline()
     return QSDPConfig(
         weight_bits=args.wbits, grad_bits=args.gbits,
         bucket_size=args.bucket, min_quant_size=args.min_quant_size,
         hierarchical=args.hierarchical,
+        coalesce=args.coalesce, prefetch=args.prefetch,
+        coalesce_max_bytes=args.coalesce_max_bytes,
     )
 
 
-def main(argv=None):
+def validate_args(ap: argparse.ArgumentParser, args) -> None:
+    """Reject inconsistent flag combos at parse time — tracing errors deep
+    inside shard_map are unreadable; these are not."""
+    if args.prefetch and not args.coalesce:
+        ap.error("--prefetch requires coalescing (the prefetch pipeline "
+                 "carries the coalesced u8 wire buffer through the scan); "
+                 "drop --no-coalesce")
+    for flag, v in (("--wbits", args.wbits), ("--gbits", args.gbits),
+                    ("--master-bits", args.master_bits)):
+        if not 2 <= v <= 8:
+            ap.error(f"{flag} must be in 2..8 (got {v}) — the wire format "
+                     f"packs 2-8 bit codes")
+    if args.moment_bits is not None and not 2 <= args.moment_bits <= 8:
+        ap.error(f"--moment-bits must be in 2..8 (got {args.moment_bits})")
+    if args.bucket <= 0:
+        ap.error(f"--bucket must be positive (got {args.bucket})")
+    if args.coalesce_max_bytes is not None and args.coalesce_max_bytes < 0:
+        ap.error("--coalesce-max-bytes must be >= 0 (0 = never coalesce)")
+    if args.data_par < 1 or args.model_par < 1:
+        ap.error("--data-par/--model-par must be >= 1")
+    if args.quantize_master and args.quantized_state:
+        ap.error("--quantize-master (QDQ f32 state) and --quantized-state "
+                 "(wire-code state) are mutually exclusive")
+    if args.plan and any([args.baseline, args.hierarchical,
+                          args.coalesce_max_bytes is not None,
+                          args.prefetch, not args.coalesce]):
+        ap.error("--plan pins the comm policy; don't combine it with "
+                 "--baseline/--hierarchical/--coalesce-max-bytes/--prefetch/"
+                 "--no-coalesce")
+
+
+def parse_args(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt-125m")
     ap.add_argument("--smoke", action="store_true", help="reduced config")
@@ -59,6 +101,21 @@ def main(argv=None):
     ap.add_argument("--bucket", type=int, default=1024)
     ap.add_argument("--min-quant-size", type=int, default=2048)
     ap.add_argument("--hierarchical", action="store_true")
+    ap.add_argument("--coalesce", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="coalesced wire format (one u8 collective per "
+                         "layer gather)")
+    ap.add_argument("--prefetch", action="store_true",
+                    help="double-buffered layer prefetch (requires "
+                         "coalescing)")
+    ap.add_argument("--coalesce-max-bytes", type=int, default=None,
+                    help="per-layer byte threshold: gathers whose coalesced "
+                         "wire buffer exceeds this fall back to per-tensor "
+                         "launches (None = always coalesce)")
+    ap.add_argument("--plan", type=str, default=None,
+                    help="DeploymentPlan JSON from repro.tune.autotune — "
+                         "pins the whole comm policy instead of the "
+                         "individual flags above")
     ap.add_argument("--quantize-master", action="store_true",
                     help="f32 state, QDQ-round-tripped through Q^w each step")
     ap.add_argument("--quantized-state", action="store_true",
@@ -72,6 +129,12 @@ def main(argv=None):
     ap.add_argument("--ckpt", type=str, default=None)
     ap.add_argument("--out-json", type=str, default=None)
     args = ap.parse_args(argv)
+    validate_args(ap, args)
+    return args
+
+
+def main(argv=None):
+    args = parse_args(argv)
 
     nd = args.data_par * args.model_par
     assert len(jax.devices()) >= nd, (len(jax.devices()), nd)
@@ -98,7 +161,13 @@ def main(argv=None):
                                   master_bits=args.master_bits,
                                   quantized_state=args.quantized_state)
 
-    tag = "baseline-FSDP" if args.baseline else f"QSDP W{args.wbits}G{args.gbits}"
+    if args.plan:
+        tag = (f"QSDP plan W{qsdp.weight_bits}G{qsdp.grad_bits} "
+               f"coalesce<={qsdp.coalesce_max_bytes}B"
+               if qsdp.coalesce_max_bytes is not None
+               else f"QSDP plan W{qsdp.weight_bits}G{qsdp.grad_bits}")
+    else:
+        tag = "baseline-FSDP" if args.baseline else f"QSDP W{args.wbits}G{args.gbits}"
     if args.quantized_state:
         tag += f" qstate{args.master_bits}" + (
             f"m{args.moment_bits}" if args.moment_bits else "")

@@ -304,7 +304,11 @@ class Model:
         pfx = f"{prefix}/"
         init = (x, jnp.zeros((), jnp.float32)) if carry_aux else x
 
-        pipelined = self.qcfg.prefetch and self.qcfg.coalesce and stack > 1
+        # prefetch rides the coalesced wire buffer through the scan carry, so
+        # it only applies when the per-layer policy actually coalesces this
+        # group (coalesce_max_bytes may veto it on small meshes).
+        pipelined = (self.qcfg.prefetch and stack > 1
+                     and eng.layer_coalesced(tuple(f"{pfx}{n}" for n in sorted(names))))
         if not pipelined:
             def body(carry, inp):
                 idx, lw = inp

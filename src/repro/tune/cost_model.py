@@ -1,0 +1,284 @@
+"""Per-layer analytic cost models for the deployment-plan autotuner.
+
+fpgaHART idiom: each schedulable unit (here: a layer group's gather and its
+gradient reduce-scatter) gets a closed-form cost composed from a small set
+of hardware constants, the search scores whole candidates by summing the
+per-layer terms, and only the shortlist is measured.
+
+The model that explains (and fixes) the coalesced small-scale regression:
+
+    t_per_tensor = L_pt * t_launch + wire / link_bw
+    t_coalesced  = L_co * t_launch + wire / link_bw + buf / ser_bw
+
+Coalescing leaves the wire bytes untouched (same codes, same metadata) and
+collapses L_pt = 3*n_quant + n_fp launches into L_co = 1, but it adds
+serialization passes over the ONE gathered buffer of ``buf = P * nbytes``
+bytes — segment concat, f32<->u8 bitcasts of the fp payloads, the vmap'd
+per-shard decode.  Equating the two sides gives the crossover
+
+    buf* = (L_pt - L_co) * t_launch * ser_bw
+
+below which coalescing wins.  On a TPU-class part t_launch ~ microseconds
+and the serialization passes run at HBM bandwidth, so buf* is tens of MB
+and whole-layer coalescing is right; on the tiny emulated CPU mesh the
+per-byte cost of those extra passes is enormous (interpreted op overhead on
+small buffers) while launches are nearly free, so buf* is sub-KB and
+per-tensor gathers win — which is exactly what BENCH_step measured
+(qsdp-coalesced 370 ms vs plain qsdp 204 ms median).  The autotuner turns
+this model into ``QSDPConfig.coalesce_max_bytes``.
+
+``ser_bw`` is an *effective* rate: on CPU it absorbs the interpreter's
+per-op overhead (which scales with the number of buckets/segments, i.e.
+with bytes), on TPU it is the fused pack/unpack passes' HBM bandwidth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from ..core import collectives as coll
+from ..core.qsdp import QSDPEngine
+from ..core.quant import fp_segment_bytes, wire_segment_bytes
+from ..roofline.analysis import HW_V5E, Hardware
+
+# ---------------------------------------------------------------------------
+# Hardware presets
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CostParams:
+    """The constants the per-layer models compose over."""
+
+    hw: Hardware          # roofline part (peak flops / hbm / link bw)
+    t_launch_s: float     # fixed dispatch+sync overhead per collective launch
+    ser_bw: float         # effective B/s of the coalesce serialize/decode passes
+
+    @property
+    def name(self) -> str:
+        return self.hw.name
+
+
+# cpu-smoke: calibrated against BENCH_step's emulated 8-device CPU mesh —
+# the coalesced variants pay ~166 ms/step over per-tensor for ~0.7 MB of
+# coalesced buffer traffic (ser_bw ~ 4 MB/s effective: interpreted per-op
+# overhead, not memcpy), while 32 extra launches cost well under a ms.
+HW_CPU_SMOKE = Hardware(name="cpu-smoke", peak_flops=5e10, hbm_bw=2e10,
+                        ici_bw=2e9)
+CPU_SMOKE = CostParams(hw=HW_CPU_SMOKE, t_launch_s=5e-6, ser_bw=4e6)
+
+# tpu-v5e: launches are ~2 us of dispatch, serialization is two fused
+# HBM passes (read + write) over the buffer.
+TPU_V5E = CostParams(hw=HW_V5E, t_launch_s=2e-6, ser_bw=HW_V5E.hbm_bw / 2)
+
+HW_PRESETS: dict[str, CostParams] = {
+    "cpu-smoke": CPU_SMOKE,
+    "tpu-v5e": TPU_V5E,
+}
+
+
+# ---------------------------------------------------------------------------
+# Per-layer gather / reduce-scatter costs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GatherCost:
+    """One collective event (a layer gather or its grad reduce-scatter)."""
+
+    launches: int     # collective launches
+    wire_bytes: int   # per-device bytes on the wire (policy-invariant)
+    ser_bytes: int    # coalesced-buffer bytes serialized (0 when per-tensor)
+
+    def time_s(self, cp: CostParams) -> float:
+        return (self.launches * cp.t_launch_s
+                + self.wire_bytes / cp.hw.ici_bw
+                + self.ser_bytes / cp.ser_bw)
+
+
+def _levels(engine: QSDPEngine) -> int:
+    return 2 if engine.cfg.hierarchical and engine.ms.multi_pod else 1
+
+
+def _per_tensor_launches(engine: QSDPEngine, names: list[str]) -> int:
+    lv = _levels(engine)
+    return sum(3 * lv if engine._is_quantized(engine.specs[n]) else 1
+               for n in names)
+
+
+def layer_gather_cost(engine: QSDPEngine, names: list[str],
+                      coalesced: bool) -> GatherCost:
+    """Cost of ONE all-gather of `names` under a forced coalesce policy."""
+    ms, cfg = engine.ms, engine.cfg
+    p = ms.fsdp_size
+    wfp = 4 if cfg.weight_wire_dtype == "float32" else 2
+    wire = sum(coll.gather_wire_bytes(
+        engine.specs[n].n_local(ms), p,
+        cfg.wcfg() if engine._is_quantized(engine.specs[n]) else None, wfp)
+        for n in names)
+    if coalesced:
+        return GatherCost(launches=_levels(engine), wire_bytes=wire,
+                          ser_bytes=engine.layer_wire_bytes(tuple(names)))
+    return GatherCost(launches=_per_tensor_launches(engine, names),
+                      wire_bytes=wire, ser_bytes=0)
+
+
+def layer_rs_cost(engine: QSDPEngine, names: list[str],
+                  coalesced: bool) -> GatherCost:
+    """Cost of ONE gradient reduce-scatter of `names` (same structure: the
+    coalesced form ships one chunked u8 buffer of ~P * per-chunk bytes)."""
+    ms, cfg = engine.ms, engine.cfg
+    p = ms.fsdp_size
+    gfp = 4 if cfg.grad_wire_dtype == "float32" else 2
+    wire = buf = 0
+    for n in names:
+        spec = engine.specs[n]
+        n_local = spec.n_local(ms)
+        gq = cfg.gcfg() if engine._is_grad_quantized(spec) else None
+        wire += coll.reduce_scatter_wire_bytes(n_local * p, p, gq, gfp)
+        # coalesced RS buffer: P chunk-rows, each one shard's worth
+        buf += p * (wire_segment_bytes(n_local, gq) if gq is not None
+                    else fp_segment_bytes(n_local, cfg.grad_wire_dtype))
+    if coalesced:
+        return GatherCost(launches=_levels(engine), wire_bytes=wire,
+                          ser_bytes=buf)
+    return GatherCost(launches=_per_tensor_launches(engine, names),
+                      wire_bytes=wire, ser_bytes=0)
+
+
+def crossover_bytes(engine: QSDPEngine, names: list[str],
+                    cp: CostParams) -> int:
+    """Gathered-buffer size at which coalescing `names` stops paying:
+    buf* = (L_pt - L_co) * t_launch * ser_bw."""
+    saved = _per_tensor_launches(engine, names) - _levels(engine)
+    return max(int(saved * cp.t_launch_s * cp.ser_bw), 0)
+
+
+# ---------------------------------------------------------------------------
+# HLO-visible launch prediction (conformance against roofline.hlo_analyzer)
+# ---------------------------------------------------------------------------
+
+
+def predict_hlo_gather_counts(engine: QSDPEngine, names: list[str],
+                              coalesced: Optional[bool] = None) -> int:
+    """All-gather launch count the *compiled HLO* shows for ONE gather of
+    `names` (what ``analyze_hlo(...)["collectives"]["counts"]`` reports).
+
+    Differs from the analytic :func:`repro.core.qsdp.layer_gather_launches`
+    in exactly one way: the analyzer only counts collectives whose replica
+    group is larger than 1, so levels of size 1 — e.g. the whole FSDP axis
+    on a (1,1) mesh — are invisible (XLA compiles them away).  `coalesced`
+    forces the policy; None uses ``engine.layer_coalesced``.
+    """
+    ms = engine.ms
+    if coalesced is None:
+        coalesced = engine.layer_coalesced(tuple(names))
+    sizes = dict(zip(ms.axes, ms.shape))
+    hier = engine.cfg.hierarchical and ms.multi_pod
+    if hier:
+        levels = [sizes.get("pod", 1), sizes["data"]]
+    else:
+        levels = [ms.fsdp_size]
+    visible = [sz for sz in levels if sz > 1]
+    if coalesced:
+        return len(visible)
+    total = 0
+    for n in names:
+        if engine._is_quantized(engine.specs[n]):
+            # 3 per visible level hierarchically, else 3 over the joint axis
+            total += 3 * (len(visible) if hier else (1 if ms.fsdp_size > 1 else 0))
+        else:
+            # fp payloads ride ONE all-gather over the joint FSDP axes
+            total += 1 if ms.fsdp_size > 1 else 0
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Step-level composition
+# ---------------------------------------------------------------------------
+
+
+def layer_groups(engine: QSDPEngine) -> list[tuple[str, list[str], int]]:
+    """(group name, param names, gathers per stack traversal) — stacked
+    specs grouped by their prefix (the scan gathers each slice once per
+    traversal), non-stacked params as singleton groups (what
+    ``Model.loss_fn`` gathers via ``engine.gather``)."""
+    grouped: dict[str, list[str]] = {}
+    singles: list[tuple[str, list[str], int]] = []
+    stacks: dict[str, int] = {}
+    for name, spec in sorted(engine.specs.items()):
+        if spec.stack is not None and "/" in name:
+            g = name.split("/", 1)[0]
+            grouped.setdefault(g, []).append(name)
+            stacks[g] = spec.stack
+        else:
+            singles.append((name, [name], 1))
+    out = [(g, ns, stacks[g]) for g, ns in sorted(grouped.items())]
+    return out + singles
+
+
+def predict_step_time(engine: QSDPEngine, cp: CostParams, *,
+                      n_micro: int = 1,
+                      coalesced_groups: Optional[dict[str, bool]] = None,
+                      t_compute_s: float = 0.0) -> float:
+    """Predicted seconds per train step: compute floor (optional, from a
+    roofline report) + the comm terms of the FSDP schedule — per microbatch
+    each layer is gathered twice (forward + remat backward) and
+    reduce-scattered once."""
+    total = t_compute_s
+    for group, names, stack in layer_groups(engine):
+        if coalesced_groups is not None:
+            co = coalesced_groups[group]
+        else:
+            co = engine.layer_coalesced(tuple(names))
+        g = layer_gather_cost(engine, names, co)
+        r = layer_rs_cost(engine, names, co)
+        total += n_micro * stack * (2 * g.time_s(cp) + r.time_s(cp))
+    return total
+
+
+def plan_layer_policies(engine: QSDPEngine, cp: CostParams):
+    """Per-group coalesce decisions + the single ``coalesce_max_bytes``
+    threshold that realizes them.
+
+    The engine expresses the policy as ONE byte threshold on the gathered
+    buffer (coalesce iff buffer <= threshold), so the search is over the
+    expressible cuts: 0 plus each group's buffer size.  For every cut, sum
+    each group's predicted gather+RS time under the decision that cut
+    induces, and keep the cheapest (weighting by the stack depth — a scan
+    group pays its cost once per layer).  This matters because the
+    unconstrained per-group optimum need not be byte-monotone: a singleton
+    group (launch savings = 0, e.g. ``final_norm``) never profits from
+    coalescing, while the big stacked groups do — the scan then correctly
+    sacrifices the singleton's nanoseconds instead of the layers' win.
+
+    Returns (policies, coalesce_max_bytes); coalesce_max_bytes is None when
+    the best cut coalesces every group (no threshold needed).
+    """
+    from .plan import LayerPolicy
+
+    infos = []
+    for group, names, stack in layer_groups(engine):
+        tco = (layer_gather_cost(engine, names, True).time_s(cp)
+               + layer_rs_cost(engine, names, True).time_s(cp))
+        tpt = (layer_gather_cost(engine, names, False).time_s(cp)
+               + layer_rs_cost(engine, names, False).time_s(cp))
+        infos.append((group, names, stack,
+                      engine.layer_wire_bytes(tuple(names)), tco, tpt))
+    cuts = sorted({0} | {buf for _, _, _, buf, _, _ in infos})
+    best_cut, best_total = 0, None
+    for t in cuts:
+        total = sum(stack * (tco if buf <= t else tpt)
+                    for _, _, stack, buf, tco, tpt in infos)
+        if best_total is None or total < best_total:
+            best_cut, best_total = t, total
+    policies = [LayerPolicy(
+        group=group,
+        coalesce=buf <= best_cut,
+        wire_buffer_bytes=buf,
+        launches_per_tensor=_per_tensor_launches(engine, names),
+        launches_coalesced=_levels(engine),
+    ) for group, names, _stack, buf, _tco, _tpt in infos]
+    if all(p.coalesce for p in policies):
+        return policies, None
+    return policies, best_cut

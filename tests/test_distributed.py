@@ -19,6 +19,10 @@ subprocesses with XLA_FLAGS=--xla_force_host_platform_device_count=8:
     (2,4) mesh: greedy slot-isolation (interleaved == solo batch-of-1,
     bit-exact, batch-sharded slot pool) and sampled-request replay
     determinism, dense + moe.
+  * scripts/check_tune_costmodel.py — the deployment-plan autotuner's
+    predicted HLO all-gather launch counts vs actually-compiled programs
+    on the (2,4) and (2,2,2) pod meshes: per-tensor / coalesced /
+    threshold-vetoed / mixed per-layer policies and hierarchical gathers.
 
 These also run in the CI `distributed` job (pytest -m slow) so they cannot
 silently rot.
@@ -69,6 +73,14 @@ def test_quantized_state_distributed():
 @pytest.mark.slow
 def test_serve_scheduler_distributed():
     r = _run("check_serve_sched.py")
+    assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-4000:]
+    assert "ALL-OK" in r.stdout
+    assert "FAIL " not in r.stdout
+
+
+@pytest.mark.slow
+def test_tune_costmodel_conformance():
+    r = _run("check_tune_costmodel.py")
     assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-4000:]
     assert "ALL-OK" in r.stdout
     assert "FAIL " not in r.stdout

@@ -1,0 +1,143 @@
+"""Parse-time flag validation in both launchers: inconsistent combos die
+with a one-line argparse error (exit code 2) instead of an unreadable
+tracing failure minutes later, and every valid combo still parses."""
+import pytest
+
+from repro.launch import serve, train
+from repro.tune.plan import PLAN_VERSION, DeploymentPlan
+
+
+@pytest.fixture(scope="module")
+def plan_path(tmp_path_factory):
+    p = tmp_path_factory.mktemp("plan") / "plan.json"
+    DeploymentPlan(
+        version=PLAN_VERSION, arch="t", mesh_axes=("data", "model"),
+        mesh_shape=(1, 1), hw="cpu-smoke",
+        qsdp={"coalesce": True, "coalesce_max_bytes": 0},
+        serve={"slots": 4, "prefill_chunk": 0, "prefill_buckets": 2,
+               "draft_bits": 0, "draft_depth": 0},
+    ).save(str(p))
+    return str(p)
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("argv", [
+    ["--prefetch", "--no-coalesce"],
+    ["--wbits", "1"],
+    ["--wbits", "9"],
+    ["--gbits", "0"],
+    ["--master-bits", "12"],
+    ["--moment-bits", "11"],
+    ["--bucket", "0"],
+    ["--coalesce-max-bytes", "-1"],
+    ["--data-par", "0"],
+    ["--model-par", "0"],
+    ["--quantize-master", "--quantized-state"],
+], ids=lambda a: " ".join(a))
+def test_train_rejects(argv, capsys):
+    with pytest.raises(SystemExit) as e:
+        train.parse_args(argv)
+    assert e.value.code == 2
+    assert "error" in capsys.readouterr().err
+
+
+@pytest.mark.parametrize("extra", [
+    ["--prefetch"], ["--baseline"], ["--hierarchical"],
+    ["--no-coalesce"], ["--coalesce-max-bytes", "0"],
+], ids=lambda a: " ".join(a))
+def test_train_rejects_plan_plus_policy_flags(plan_path, extra, capsys):
+    with pytest.raises(SystemExit) as e:
+        train.parse_args(["--plan", plan_path] + extra)
+    assert e.value.code == 2
+    assert "--plan pins the comm policy" in capsys.readouterr().err
+
+
+@pytest.mark.parametrize("argv", [
+    [],
+    ["--prefetch"],                      # coalesce defaults on
+    ["--coalesce-max-bytes", "0"],
+    ["--wbits", "2", "--gbits", "8", "--moment-bits", "8"],
+    ["--quantized-state", "--master-bits", "4"],
+], ids=lambda a: " ".join(a) or "<defaults>")
+def test_train_accepts(argv):
+    args = train.parse_args(argv)
+    assert args.data_par >= 1
+
+
+def test_train_accepts_plan_flag(plan_path):
+    args = train.parse_args(["--plan", plan_path])
+    assert args.plan == plan_path
+    qsdp = train.build_qsdp(args)
+    assert qsdp.coalesce and qsdp.coalesce_max_bytes == 0
+
+
+def test_train_missing_plan_file_is_clean_error(tmp_path):
+    args = train.parse_args(["--plan", str(tmp_path / "nope.json")])
+    with pytest.raises(SystemExit) as e:
+        train.build_qsdp(args)
+    assert "nope.json" in str(e.value)
+
+
+# ---------------------------------------------------------------------------
+# serve
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("argv", [
+    ["--wbits", "1"],
+    ["--wbits", "9"],
+    ["--draft-bits", "1", "--draft-depth", "4", "--continuous"],
+    ["--draft-bits", "9", "--draft-depth", "4", "--continuous"],
+    ["--draft-bits", "4", "--continuous"],            # missing depth
+    ["--draft-depth", "4", "--continuous"],           # missing bits
+    ["--draft-bits", "4", "--draft-depth", "4"],      # missing --continuous
+    ["--kv-block-size", "16"],                        # without prefill chunk
+    ["--kv-quant-bits", "8", "--prefill-chunk", "8"],  # without block size
+    ["--kv-quant-bits", "1", "--prefill-chunk", "8", "--kv-block-size", "8"],
+    ["--prefill-buckets", "0"],
+    ["--prefill-chunk", "-1"],
+    ["--prefill-interleave", "0"],
+], ids=lambda a: " ".join(a))
+def test_serve_rejects(argv, capsys):
+    with pytest.raises(SystemExit) as e:
+        serve.parse_args(argv)
+    assert e.value.code == 2
+    assert "error" in capsys.readouterr().err
+
+
+def test_serve_rejects_plan_plus_baseline(plan_path, capsys):
+    with pytest.raises(SystemExit) as e:
+        serve.parse_args(["--plan", plan_path, "--baseline"])
+    assert e.value.code == 2
+
+
+def test_serve_rejects_missing_plan_file(tmp_path, capsys):
+    with pytest.raises(SystemExit) as e:
+        serve.parse_args(["--plan", str(tmp_path / "nope.json")])
+    assert e.value.code == 2
+
+
+@pytest.mark.parametrize("argv", [
+    [],
+    ["--continuous", "--prefill-chunk", "16"],
+    ["--continuous", "--prefill-chunk", "16", "--kv-block-size", "8",
+     "--kv-quant-bits", "4"],
+    ["--continuous", "--draft-bits", "4", "--draft-depth", "4"],
+], ids=lambda a: " ".join(a) or "<defaults>")
+def test_serve_accepts(argv):
+    args = serve.parse_args(argv)
+    assert args.plan_obj is None
+
+
+def test_serve_plan_sets_defaults_but_flags_win(plan_path):
+    # plan's serve knobs become the defaults
+    args = serve.parse_args(["--plan", plan_path])
+    assert args.plan_obj is not None
+    assert args.batch == 4 and args.prefill_buckets == 2
+    # an explicitly typed flag still overrides the plan's knob
+    args = serve.parse_args(["--plan", plan_path, "--batch", "16"])
+    assert args.batch == 16 and args.prefill_buckets == 2

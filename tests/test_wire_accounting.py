@@ -1,0 +1,105 @@
+"""Wire-byte accounting regression: analytic bytes == actual buffer length.
+
+The analytic communication model (wire_segment_bytes / gather_wire_bytes /
+reduce_scatter_wire_bytes) feeds the roofline, the bench bytes columns and
+the repro.tune cost model, so it must pin the REAL packed wire format for
+every code width — including the sub-byte widths where codes_per_byte > 1
+(2/4/8 bit-pack exactly) and the awkward widths 3/5/6/7 that occupy one
+byte per code on the emulated wire.
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.core import collectives as coll
+from repro.core.quant import (
+    QuantConfig,
+    fp_pack,
+    fp_segment_bytes,
+    quantize,
+    wire_pack,
+)
+
+BUCKET = 64
+
+
+def _cfg(bits, meta="float32"):
+    return QuantConfig(bits=bits, bucket_size=BUCKET, mode="shift",
+                       backend="jnp", meta_dtype=meta)
+
+
+def _packed_nbytes(n, cfg):
+    """Length of the ACTUAL packed wire buffer for an n-element tensor."""
+    x = jax.random.normal(jax.random.PRNGKey(8 * n + cfg.bits), (n,))
+    buf = wire_pack(quantize(x, cfg, jax.random.PRNGKey(1)))
+    assert buf.dtype == jax.numpy.uint8 and buf.ndim == 1
+    return int(buf.shape[0])
+
+
+@pytest.mark.parametrize("bits", range(2, 9))
+@pytest.mark.parametrize("meta", ["float32", "bfloat16"])
+@pytest.mark.parametrize("n", [7, BUCKET, 3 * BUCKET, 1000])
+def test_segment_bytes_pin_packed_buffer(bits, meta, n):
+    cfg = _cfg(bits, meta)
+    assert coll.WireSegment(n, cfg).nbytes == _packed_nbytes(n, cfg)
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_fp_segment_bytes_pin_packed_buffer(dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (100,))
+    assert fp_segment_bytes(100, dtype) == int(fp_pack(x, dtype).shape[0])
+    assert coll.WireSegment(100, None, dtype).nbytes == \
+        fp_segment_bytes(100, dtype)
+
+
+def test_layout_nbytes_pin_encoded_buffer():
+    """The whole coalesced layout: mixed quant widths + fp payloads."""
+    segs = (coll.WireSegment(300, _cfg(4)),
+            coll.WireSegment(50, None, "float32"),
+            coll.WireSegment(BUCKET, _cfg(3, "bfloat16")),
+            coll.WireSegment(10, None, "bfloat16"),
+            coll.WireSegment(200, _cfg(8)))
+    layout = coll.WireLayout(segs)
+    key = jax.random.PRNGKey(2)
+    xs = [jax.random.normal(jax.random.fold_in(key, i), (s.n,))
+          for i, s in enumerate(segs)]
+    keys = [jax.random.fold_in(key, 100 + i) if s.cfg is not None else None
+            for i, s in enumerate(segs)]
+    buf = coll.encode_wire(xs, layout, keys)
+    assert int(buf.shape[0]) == layout.nbytes
+    assert layout.offsets()[-1] + segs[-1].nbytes == layout.nbytes
+
+
+@pytest.mark.parametrize("bits", range(2, 9))
+@pytest.mark.parametrize("p", [2, 8])
+def test_gather_wire_bytes_pin_packed_shards(bits, p):
+    """Ring all-gather moves (P-1) shards; each shard IS the packed buffer."""
+    cfg = _cfg(bits)
+    for n_local in (BUCKET, 1000):
+        assert coll.gather_wire_bytes(n_local, p, cfg) == \
+            (p - 1) * _packed_nbytes(n_local, cfg)
+    # fp payload: raw dtype bytes per element
+    assert coll.gather_wire_bytes(96, p, None, fp_bytes=4) == (p - 1) * 96 * 4
+    assert coll.gather_wire_bytes(96, p, None, fp_bytes=2) == (p - 1) * 96 * 2
+
+
+@pytest.mark.parametrize("bits", range(2, 9))
+@pytest.mark.parametrize("p", [2, 8])
+def test_reduce_scatter_wire_bytes_pin_packed_chunks(bits, p):
+    """Ring RS moves (P-1) chunks of n//p elements, each a packed buffer."""
+    cfg = _cfg(bits)
+    for n in (p * BUCKET, p * 500):
+        assert coll.reduce_scatter_wire_bytes(n, p, cfg) == \
+            (p - 1) * _packed_nbytes(n // p, cfg)
+    assert coll.reduce_scatter_wire_bytes(p * 96, p, None) == (p - 1) * 96 * 4
+
+
+def test_meta_dtype_halves_metadata_only():
+    cfg32 = _cfg(8)
+    cfg16 = dataclasses.replace(cfg32, meta_dtype="bfloat16")
+    n = 5 * BUCKET
+    # bf16 metadata saves exactly 2 bytes per (scale, zero) pair per bucket
+    assert _packed_nbytes(n, cfg32) - _packed_nbytes(n, cfg16) == 2 * 2 * 5
+    assert coll.WireSegment(n, cfg32).nbytes - \
+        coll.WireSegment(n, cfg16).nbytes == 2 * 2 * 5
