@@ -1,0 +1,132 @@
+"""Versioned schema for the BENCH_step.json / BENCH_serve.json artifacts.
+
+The two bench writers upload their JSON as CI artifacts so the perf
+trajectory accumulates across commits; downstream tooling (and humans
+diffing artifacts between runs) depends on the column set staying stable.
+This module pins that contract: a hand-rolled validator (no jsonschema
+dependency) that the writers run before ``json.dump`` and the tier-1 tests
+exercise on both synthetic documents and the checked-in artifacts.
+
+Versioning: documents carry a top-level ``schema_version``.  A document
+without one is a legacy artifact written before this module existed and is
+treated as version 1; a document with a *different* version fails loudly so
+a column rename is forced to bump the constant here and update this spec.
+
+Field specs map column name -> type token:
+  num   int or float (bools rejected)
+  int   integral (bools rejected)
+  bool  real bool
+  str   string
+  dict  mapping
+  list  any list
+  numlist  list of num
+Extra columns are always allowed — the schema pins the floor, not the
+ceiling.
+"""
+
+BENCH_SCHEMA_VERSION = 1
+
+
+class BenchSchemaError(ValueError):
+    """A bench document is missing required columns or has wrong types."""
+
+
+def _is_num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+_CHECKS = {
+    "num": _is_num,
+    "int": lambda v: isinstance(v, int) and not isinstance(v, bool),
+    "bool": lambda v: isinstance(v, bool),
+    "str": lambda v: isinstance(v, str),
+    "dict": lambda v: isinstance(v, dict),
+    "list": lambda v: isinstance(v, list),
+    "numlist": lambda v: isinstance(v, list) and all(_is_num(x) for x in v),
+}
+
+STEP_CONFIG = {
+    "n_layers": "int", "d_model": "int", "d_ff": "int", "seq": "int",
+    "batch": "int", "micro": "int", "mesh": "str", "steps": "int",
+    "smoke": "bool",
+}
+STEP_VARIANT = {
+    "train_state_bytes": "int", "train_state_bytes_per_device": "int",
+    "ckpt_payload_bytes": "int", "compile_s": "num",
+    "step_ms_median": "num", "step_ms_all": "numlist", "loss_final": "num",
+    "layer_gather_launches_analytic": "int",
+    "wire_bytes_analytic_per_step": "dict", "hlo_collective_bytes": "num",
+    "hlo_collective_launches": "dict", "hlo_launches_by_dtype": "dict",
+}
+STEP_SUMMARY = {
+    "ag_launch_reduction": "num", "wire_bytes_ratio_co_vs_per_tensor": "num",
+    "autoplan_vs_qsdp_step_ratio": "num",
+    "autoplan_vs_coalesced_step_ratio": "num",
+}
+
+SERVE_CONFIG = {
+    "n_layers": "int", "d_model": "int", "d_ff": "int", "mesh": "str",
+    "slots": "int", "requests": "int", "smoke": "bool",
+}
+SERVE_VARIANT = {
+    "compile_s": "num", "wall_s": "num", "tokens": "int",
+    "tokens_per_s": "num", "decode_steps": "int", "step_ms_mean": "num",
+    "latency_s_p50": "num", "latency_s_p95": "num", "ttft_s_p95": "num",
+    "mean_occupancy": "num", "slots": "int", "launches_per_token": "num",
+    "gather_bytes_per_decode_step": "num", "prefill_traces": "int",
+    "prefill_launches": "int",
+}
+SERVE_SUMMARY = {
+    "gather_bytes_ratio_qsdp_vs_baseline": "num",
+    "tokens_equal_across_variants": "bool",
+}
+
+
+def _check_fields(obj, spec, where, errors):
+    if not isinstance(obj, dict):
+        errors.append(f"{where}: expected object, got {type(obj).__name__}")
+        return
+    for field, token in spec.items():
+        if field not in obj:
+            errors.append(f"{where}: missing required column '{field}'")
+        elif not _CHECKS[token](obj[field]):
+            errors.append(
+                f"{where}.{field}: expected {token}, "
+                f"got {type(obj[field]).__name__} ({obj[field]!r:.40})")
+
+
+def _validate(doc, kind, config_spec, variant_spec, summary_spec):
+    errors = []
+    if not isinstance(doc, dict):
+        raise BenchSchemaError(f"{kind}: document is not a JSON object")
+    version = doc.get("schema_version", BENCH_SCHEMA_VERSION)
+    if version != BENCH_SCHEMA_VERSION:
+        errors.append(f"{kind}: schema_version {version} != "
+                      f"{BENCH_SCHEMA_VERSION} understood by this validator")
+    _check_fields(doc.get("config"), config_spec, f"{kind}.config", errors)
+    variants = doc.get("variants")
+    if not isinstance(variants, dict) or not variants:
+        errors.append(f"{kind}.variants: expected non-empty object")
+    else:
+        for name, row in variants.items():
+            _check_fields(row, variant_spec, f"{kind}.variants[{name}]",
+                          errors)
+    _check_fields(doc.get("summary"), summary_spec, f"{kind}.summary", errors)
+    if errors:
+        raise BenchSchemaError("\n".join(errors))
+
+
+def validate_bench_step(doc):
+    """Validate a BENCH_step.json document; raises BenchSchemaError."""
+    _validate(doc, "BENCH_step", STEP_CONFIG, STEP_VARIANT, STEP_SUMMARY)
+
+
+def validate_bench_serve(doc):
+    """Validate a BENCH_serve.json document; raises BenchSchemaError."""
+    _validate(doc, "BENCH_serve", SERVE_CONFIG, SERVE_VARIANT, SERVE_SUMMARY)
+
+
+def stamp(doc):
+    """Stamp the current schema_version onto a document (returns it)."""
+    doc["schema_version"] = BENCH_SCHEMA_VERSION
+    return doc

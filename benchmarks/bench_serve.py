@@ -70,6 +70,11 @@ import argparse
 import json
 import time
 
+try:
+    from . import bench_schema
+except ImportError:  # run as a script: sys.path[0] is benchmarks/
+    import bench_schema
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -549,8 +554,10 @@ def main(argv=None):
           f"(draft overhead {sp['draft_overhead']:.2f}) at tokens bit-equal "
           f"to non-speculative qsdp")
 
+    doc = _round_floats(bench_schema.stamp(out))
+    bench_schema.validate_bench_serve(doc)
     with open(args.out, "w") as f:
-        json.dump(_round_floats(out), f, indent=1)
+        json.dump(doc, f, indent=1)
     print(f"wrote {args.out}")
     return 0
 

@@ -43,6 +43,11 @@ import json
 import tempfile
 import time
 
+try:
+    from . import bench_schema
+except ImportError:  # run as a script: sys.path[0] is benchmarks/
+    import bench_schema
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -235,8 +240,10 @@ def main(argv=None):
           f"all-gather launches at {out['summary']['wire_bytes_ratio_co_vs_per_tensor']:.3f}x "
           f"the wire bytes")
 
+    doc = _round_floats(bench_schema.stamp(out))
+    bench_schema.validate_bench_step(doc)
     with open(args.out, "w") as f:
-        json.dump(_round_floats(out), f, indent=1)
+        json.dump(doc, f, indent=1)
     print(f"wrote {args.out}")
     return 0
 

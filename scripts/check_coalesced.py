@@ -21,10 +21,10 @@ Validates:
 
 Exit code 0 + 'ALL-OK' on success.
 """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from _mesh_common import FAIL, check, finish, force_host_devices
+
+force_host_devices(8)
 import dataclasses
-import sys
 from functools import partial
 
 import jax
@@ -39,15 +39,6 @@ from repro.core.quant import QuantConfig
 from repro.models.config import ModelConfig
 from repro.models.transformer import Model
 from repro.roofline.hlo_analyzer import analyze_hlo
-
-FAIL = []
-
-
-def check(name, ok, info=""):
-    print(("PASS " if ok else "FAIL ") + name, info)
-    if not ok:
-        FAIL.append(name)
-
 
 # ---------------------------------------------------------------------------
 # 1. collective-level bit-exactness, (8,) mesh
@@ -281,5 +272,4 @@ c4, d4 = fwd_ag_counts(q_pf, 4)
 marg_pf = (d4.get("all-gather:u8", 0) - d2.get("all-gather:u8", 0)) / 2
 check("hlo-prefetch-marginal-1", marg_pf == 1, f"marginal={marg_pf}")
 
-print("ALL-OK" if not FAIL else f"FAILED: {FAIL}")
-sys.exit(0 if not FAIL else 1)
+finish()

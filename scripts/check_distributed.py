@@ -10,9 +10,9 @@ Validates on a (2, 4) mesh:
 
 Exit code 0 + 'ALL-OK' on success.  Invoked by tests/test_distributed.py.
 """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import sys
+from _mesh_common import FAIL, check, finish, force_host_devices
+
+force_host_devices(8)
 from functools import partial
 
 import jax
@@ -30,15 +30,6 @@ from repro.models.config import ModelConfig
 from repro.models.transformer import Model
 from repro.models.decode import DecodeSpec
 from repro.serve.engine import ServeEngine
-
-FAIL = []
-
-
-def check(name, ok, info=""):
-    print(("PASS " if ok else "FAIL ") + name, info)
-    if not ok:
-        FAIL.append(name)
-
 
 # ---------------------------------------------------------------------------
 # 1-2: quantized collectives numerics (1-axis)
@@ -242,5 +233,4 @@ for arch_kw in (dict(arch_type="dense", n_layers=2, d_model=64, vocab_size=256,
           bool((toks_dec == ref).all()),
           f"dec={toks_dec[0].tolist()} ref={ref[0].tolist()}")
 
-print("ALL-OK" if not FAIL else f"FAILED: {FAIL}")
-sys.exit(0 if not FAIL else 1)
+finish()

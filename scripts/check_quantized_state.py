@@ -15,8 +15,9 @@ Validates:
 
 Exit code 0 + 'ALL-OK' on success.
 """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from _mesh_common import check, finish, force_host_devices
+
+force_host_devices(8)
 
 import jax
 import jax.numpy as jnp
@@ -35,15 +36,6 @@ from repro.train.step import (
     quantize_train_state,
     state_pspecs,
 )
-
-FAIL = []
-
-
-def check(name, ok, info=""):
-    print(("PASS " if ok else "FAIL ") + name, info)
-    if not ok:
-        FAIL.append(name)
-
 
 MCFG = ModelConfig(name="t", arch_type="dense", n_layers=2, d_model=64,
                    vocab_size=128, n_heads=4, n_kv_heads=4, head_dim=16,
@@ -192,7 +184,4 @@ ok = all(np.array_equal(ref[k], got[k]) for k in ref)
 check("ckpt-qstate-2x4-to-1x1-decoded-bitexact", ok)
 
 
-if FAIL:
-    print(f"{len(FAIL)} FAILURES: {FAIL}")
-    raise SystemExit(1)
-print("ALL-OK")
+finish()

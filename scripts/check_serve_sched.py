@@ -9,10 +9,9 @@ sequence-sharded over the 4-way model axis, so per-chunk ring writes and
 the chunk_attend psum cross shard boundaries only an 8-device run
 exercises).
 """
-import os
-import sys
+from _mesh_common import check, finish, force_host_devices, mesh_and_spec
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+force_host_devices(8)
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -26,17 +25,7 @@ from repro.models.transformer import Model  # noqa: E402
 from repro.serve import (ContinuousScheduler, Request,  # noqa: E402
                          ServeEngine, make_sample_params)
 
-FAIL = []
-
-
-def check(name, ok, detail=""):
-    print(("OK   " if ok else "FAIL ") + name + (f"  {detail}" if detail else ""))
-    if not ok:
-        FAIL.append(name)
-
-
-mesh = jax.make_mesh((2, 4), ("data", "model"))
-ms = MeshSpec(axes=("data", "model"), shape=(2, 4))
+mesh, ms = mesh_and_spec((2, 4))
 GATHER_KEY = jax.random.PRNGKey(7)
 RING = 32  # multiple of model_par=4
 VOCAB = 256
@@ -274,5 +263,4 @@ for arch_kw in (dict(arch_type="dense", n_layers=2, d_model=64,
                   f"acc/launch={st6['accepted_per_launch']:.2f} "
                   f"l/tok={st6['launches_per_token']:.2f}")
 
-print("ALL-OK" if not FAIL else f"FAILED: {FAIL}")
-sys.exit(0 if not FAIL else 1)
+finish()

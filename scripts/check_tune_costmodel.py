@@ -18,10 +18,11 @@ programs:
 
 Exit code 0 + 'ALL-OK' on success.
 """
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+from _mesh_common import check, finish, force_host_devices, mesh_and_spec
+
+force_host_devices(8)
+
 import dataclasses
-import sys
 from functools import partial
 
 import jax
@@ -35,17 +36,7 @@ from repro.models.transformer import Model
 from repro.roofline.hlo_analyzer import analyze_hlo
 from repro.tune.cost_model import layer_groups, predict_hlo_gather_counts
 
-FAIL = []
-
-
-def check(name, ok, info=""):
-    print(("PASS " if ok else "FAIL ") + name, info)
-    if not ok:
-        FAIL.append(name)
-
-
-mesh24 = jax.make_mesh((2, 4), ("data", "model"))
-ms24 = MeshSpec(axes=("data", "model"), shape=(2, 4))
+mesh24, ms24 = mesh_and_spec((2, 4))
 mcfg = ModelConfig(name="t", arch_type="dense", n_layers=2, d_model=128,
                    vocab_size=256, n_heads=8, n_kv_heads=4, head_dim=16,
                    d_ff=256)
@@ -159,5 +150,4 @@ groups = {g for g, _, _ in layer_groups(probe)}
 check("layer-groups-cover", {"layers", "embed", "final_norm"} <= groups,
       str(sorted(groups)))
 
-print("ALL-OK" if not FAIL else f"FAILED: {FAIL}")
-sys.exit(0 if not FAIL else 1)
+finish()

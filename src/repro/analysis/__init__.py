@@ -1,0 +1,27 @@
+"""Static analysis (`qlint`): trace-time invariant auditor.
+
+Four passes, none of which executes a training step:
+
+  lint        AST conventions over src/ (host syncs in the scheduler loop,
+              literal PRNGKeys in library code, kernel-dispatch bypasses)
+  key         static enumeration of every quantization-key derivation over
+              the full param trees of all configs/ families; (key, tensor)
+              uniqueness + FNV hash-collision detection
+  jaxpr       trace the jitted train step / decode_fn / prefill_chunk_fn /
+              verify_step to ClosedJaxprs and walk them for redundant
+              quantize->dequantize->quantize round-trips, u8 wire buffers
+              widened before a collective, and nondeterminism-hazard
+              primitives on bit-identity-guarded paths
+  collective  compile the forward for a mesh/DeploymentPlan and diff
+              hlo_analyzer collective counts + wire bytes against
+              tune.cost_model.predict_hlo_gather_counts
+
+Run: ``PYTHONPATH=src python -m repro.analysis.qlint --all``.  Findings
+carry stable rule IDs; ``qlint_baseline.json`` suppresses the justified
+ones so CI gates on "no new findings".  Keep this module import-light —
+the CLI must be able to set XLA_FLAGS before anything pulls in jax.
+"""
+
+from .findings import Finding, RULES, load_baseline, partition_findings
+
+__all__ = ["Finding", "RULES", "load_baseline", "partition_findings"]

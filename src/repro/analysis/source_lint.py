@@ -1,0 +1,158 @@
+"""Source lint: AST conventions over src/ (rules QS401-QS403).
+
+QS401  host syncs inside ``ContinuousScheduler``'s per-step loop.  The
+       scheduler's contract (serve/scheduler.py) is ONE batched host sync
+       per launch; any `.item()`, `jax.device_get(...)` or
+       `.block_until_ready()` added to its methods is either that one
+       deliberate sync (baseline it, with the justification) or a
+       per-token/per-lane sync regression (fix it).
+QS402  ``jax.random.PRNGKey(<int literal>)`` in library code.  Seeds are
+       caller-owned: literal keys silently correlate quantization noise
+       between components that should be independent.
+QS403  imports that reach past ``kernels.ops`` (the backend dispatcher)
+       into kernel implementation modules from outside ``kernels/`` —
+       bypassing the jnp/pallas switch `core.quant` owns.
+
+Pure stdlib; runs on any tree (tests point it at seeded temp dirs).
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .findings import Finding
+
+HOST_SYNC_ATTRS = ("item", "block_until_ready")
+SCHEDULER_CLASS = "ContinuousScheduler"
+# methods outside the admit/launch/step loop (no device work by contract)
+SCHEDULER_EXEMPT = ("__init__",)
+KERNEL_PKG = "kernels"
+KERNEL_PUBLIC = ("ops",)  # the dispatch surface; everything else is private
+
+
+def _attr_chain(node: ast.AST) -> str:
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _host_sync_pattern(call: ast.Call) -> str:
+    """Name the host-sync pattern a Call matches, or ''. """
+    chain = _attr_chain(call.func)
+    leaf = chain.rsplit(".", 1)[-1]
+    if leaf in HOST_SYNC_ATTRS and isinstance(call.func, ast.Attribute):
+        return leaf
+    if chain in ("jax.device_get", "device_get"):
+        return "device_get"
+    return ""
+
+
+def _prngkey_literal(call: ast.Call) -> bool:
+    chain = _attr_chain(call.func)
+    if not chain.endswith("PRNGKey"):
+        return False
+    return bool(call.args) and isinstance(call.args[0], ast.Constant) \
+        and isinstance(call.args[0].value, int)
+
+
+def _kernel_import_violation(node: ast.AST) -> str:
+    """Return the offending module path for an import that reaches past the
+    kernels dispatch surface, or ''. """
+    if isinstance(node, ast.ImportFrom) and node.module:
+        mod = node.module
+        parts = mod.split(".")
+        if KERNEL_PKG in parts:
+            sub = parts[parts.index(KERNEL_PKG) + 1:]
+            if sub and sub[0] not in KERNEL_PUBLIC:
+                return mod
+            if not sub:  # from ..kernels import X — X must be public
+                bad = [a.name for a in node.names
+                       if a.name not in KERNEL_PUBLIC]
+                if bad:
+                    return f"{mod} import {','.join(bad)}"
+    if isinstance(node, ast.Import):
+        for a in node.names:
+            parts = a.name.split(".")
+            if KERNEL_PKG in parts:
+                sub = parts[parts.index(KERNEL_PKG) + 1:]
+                if sub and sub[0] not in KERNEL_PUBLIC:
+                    return a.name
+    return ""
+
+
+def _lint_module(tree: ast.Module, rel: str) -> list[Finding]:
+    out = []
+    counts: dict[str, int] = {}
+
+    def _site(base: str) -> str:
+        # occurrence counter keeps identical patterns in one scope distinct
+        n = counts.get(base, 0)
+        counts[base] = n + 1
+        return base if n == 0 else f"{base}#{n}"
+
+    in_kernels = f"/{KERNEL_PKG}/" in f"/{rel}"
+    for node in ast.walk(tree):
+        # QS403 — anywhere outside kernels/ itself
+        if not in_kernels:
+            bad = _kernel_import_violation(node)
+            if bad:
+                out.append(Finding(
+                    "QS403", _site(f"{rel}::import::{bad}"),
+                    f"import reaches past kernels.{'/'.join(KERNEL_PUBLIC)} "
+                    f"dispatch surface: {bad}", rel, node.lineno))
+        # QS402 — module-wide
+        if isinstance(node, ast.Call) and _prngkey_literal(node):
+            val = node.args[0].value
+            out.append(Finding(
+                "QS402", _site(f"{rel}::PRNGKey({val})"),
+                f"literal jax.random.PRNGKey({val}) in library code",
+                rel, node.lineno))
+        # QS401 — scheduler class methods only
+        if isinstance(node, ast.ClassDef) and node.name == SCHEDULER_CLASS:
+            for meth in node.body:
+                if not isinstance(meth, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                if meth.name in SCHEDULER_EXEMPT:
+                    continue
+                for sub in ast.walk(meth):
+                    if isinstance(sub, ast.Call):
+                        pat = _host_sync_pattern(sub)
+                        if pat:
+                            out.append(Finding(
+                                "QS401",
+                                _site(f"{rel}::{SCHEDULER_CLASS}."
+                                      f"{meth.name}::{pat}"),
+                                f"host sync `{pat}` in scheduler loop "
+                                f"method {meth.name}", rel, sub.lineno))
+    return out
+
+
+def lint_source(root) -> list[Finding]:
+    """Lint every .py under `root` (normally src/repro)."""
+    root = Path(root)
+    out = []
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        # the analyzer's own trace harness builds programs under synthetic
+        # keys by construction — nothing it traces is ever executed
+        if rel.startswith("analysis/"):
+            continue
+        try:
+            tree = ast.parse(path.read_text(), filename=str(path))
+        except SyntaxError as e:
+            out.append(Finding("QS403", f"{rel}::parse-error",
+                               f"unparseable source: {e}", rel, e.lineno or 0))
+            continue
+        out.extend(_lint_module(tree, rel))
+    return out
+
+
+def run(root=None) -> list[Finding]:
+    if root is None:
+        root = Path(__file__).resolve().parents[1]  # src/repro
+    return lint_source(root)

@@ -1025,7 +1025,11 @@ class DecodeModel:
         audio = batch["audio_embeds"].astype(m.compute_dtype)
         b, s_enc, _ = audio.shape
         cos_e, sin_e = L.rope_cos_sin(jnp.arange(s_enc), cfg.head_dim, cfg.rope_theta)
-        mem = m._scan_layers(params, "enc", audio, key, cos_e, sin_e,
+        # offset-3000 encoder key scope — must match Model._loss_encdec
+        # (qlint QK201: enc/dec layers share short names; a shared parent
+        # key would correlate their quantization noise)
+        mem = m._scan_layers(params, "enc", audio,
+                             jax.random.fold_in(key, 3000), cos_e, sin_e,
                              jnp.arange(s_enc), m._enc_layer)
         efn = m.engine.gather("enc_final_norm", params["enc_final_norm"], key)
         mem = L.rms_norm(mem, efn, cfg.norm_eps)

@@ -430,7 +430,13 @@ class Model:
         b, s_dec = tokens.shape
         s_enc = audio.shape[1]
         cos_e, sin_e = L.rope_cos_sin(jnp.arange(s_enc), cfg.head_dim, cfg.rope_theta)
-        mem = self._scan_layers(params, "enc", audio, key, cos_e, sin_e,
+        # the encoder stack gets its own key scope (offset 3000, same family
+        # as the hybrid group offsets): enc and dec layers share short
+        # names, so scanning both under `key` would derive IDENTICAL
+        # quantization keys for enc[i]/wq and dec[i]/wq — correlated
+        # shift-rounding noise across tensors (qlint QK201)
+        mem = self._scan_layers(params, "enc", audio,
+                                jax.random.fold_in(key, 3000), cos_e, sin_e,
                                 jnp.arange(s_enc), self._enc_layer)
         efn = self.engine.gather("enc_final_norm", params["enc_final_norm"], key)
         mem = L.rms_norm(mem, efn, cfg.norm_eps)

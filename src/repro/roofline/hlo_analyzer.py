@@ -94,6 +94,10 @@ def _group_size(line: str) -> int:
     m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
     if m:
         return len(m.group(1).split(","))
+    if "source_target_pairs={{" in line:
+        # collective-permute carries pairs, not groups; any pair means the
+        # payload crosses the wire (the formula charges full result bytes).
+        return 2
     return 1
 
 

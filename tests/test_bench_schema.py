@@ -1,0 +1,121 @@
+"""Schema contract for the BENCH_step.json / BENCH_serve.json artifacts.
+
+The bench writers validate their output against benchmarks/bench_schema.py
+before writing; these tests pin the validator itself (dropped columns,
+wrong types, and version mismatches must fail loudly) and check the
+artifacts checked in at the repo root still conform.
+"""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "benchmarks"))
+
+import bench_schema  # noqa: E402
+from bench_schema import (  # noqa: E402
+    BENCH_SCHEMA_VERSION, BenchSchemaError, validate_bench_serve,
+    validate_bench_step)
+
+_FILL = {"num": 1.5, "int": 1, "bool": True, "str": "x", "dict": {},
+         "list": [], "numlist": [1.0, 2.0]}
+
+
+def _row(spec):
+    return {k: _FILL[t] for k, t in spec.items()}
+
+
+def _step_doc():
+    return {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "config": _row(bench_schema.STEP_CONFIG),
+        "variants": {"qsdp": _row(bench_schema.STEP_VARIANT),
+                     "qsdp-coalesced": _row(bench_schema.STEP_VARIANT)},
+        "summary": _row(bench_schema.STEP_SUMMARY),
+    }
+
+
+def _serve_doc():
+    return {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "config": _row(bench_schema.SERVE_CONFIG),
+        "variants": {"qsdp": _row(bench_schema.SERVE_VARIANT)},
+        "summary": _row(bench_schema.SERVE_SUMMARY),
+    }
+
+
+def test_minimal_docs_validate():
+    validate_bench_step(_step_doc())
+    validate_bench_serve(_serve_doc())
+
+
+def test_extra_columns_allowed():
+    doc = _step_doc()
+    doc["variants"]["qsdp"]["novel_metric"] = 42
+    doc["summary"]["extra_ratio"] = 0.5
+    validate_bench_step(doc)
+
+
+def test_dropped_variant_column_fails():
+    doc = _step_doc()
+    del doc["variants"]["qsdp"]["step_ms_median"]
+    with pytest.raises(BenchSchemaError, match="step_ms_median"):
+        validate_bench_step(doc)
+
+
+def test_dropped_summary_column_fails():
+    doc = _serve_doc()
+    del doc["summary"]["gather_bytes_ratio_qsdp_vs_baseline"]
+    with pytest.raises(BenchSchemaError,
+                       match="gather_bytes_ratio_qsdp_vs_baseline"):
+        validate_bench_serve(doc)
+
+
+def test_wrong_type_fails():
+    doc = _step_doc()
+    doc["config"]["smoke"] = "yes"  # str where bool required
+    with pytest.raises(BenchSchemaError, match="smoke"):
+        validate_bench_step(doc)
+    doc = _step_doc()
+    doc["variants"]["qsdp"]["compile_s"] = True  # bool is not a num
+    with pytest.raises(BenchSchemaError, match="compile_s"):
+        validate_bench_step(doc)
+
+
+def test_version_mismatch_fails():
+    doc = _step_doc()
+    doc["schema_version"] = BENCH_SCHEMA_VERSION + 98
+    with pytest.raises(BenchSchemaError, match="schema_version"):
+        validate_bench_step(doc)
+
+
+def test_legacy_doc_without_version_validates():
+    doc = _step_doc()
+    del doc["schema_version"]
+    validate_bench_step(doc)
+
+
+def test_empty_variants_fails():
+    doc = _serve_doc()
+    doc["variants"] = {}
+    with pytest.raises(BenchSchemaError, match="variants"):
+        validate_bench_serve(doc)
+
+
+def test_stamp_sets_current_version():
+    doc = _step_doc()
+    del doc["schema_version"]
+    assert bench_schema.stamp(doc)["schema_version"] == BENCH_SCHEMA_VERSION
+
+
+@pytest.mark.parametrize("fname,validate", [
+    ("BENCH_step.json", validate_bench_step),
+    ("BENCH_serve.json", validate_bench_serve),
+])
+def test_checked_in_artifacts_conform(fname, validate):
+    path = ROOT / fname
+    if not path.exists():
+        pytest.skip(f"{fname} not present at repo root")
+    validate(json.loads(path.read_text()))
